@@ -1,0 +1,44 @@
+"""Paper section 2, figures 10-12: train/inference energy asymmetry.
+
+  "piles of wood of energy [to train] ... using a model requires less
+   energy than lighting a match."
+
+We make the argument quantitative with FLOPs accounting on the paper's
+own model class and on the assigned archs: train FLOPs (6*N*D over the
+full corpus) vs one inference (2*N per token), converted to joules with a
+representative accelerator efficiency (~1 TFLOP/J bf16, TPU-v5e-class).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.configs.base import get_config
+
+JOULES_PER_FLOP = 1e-12          # ~1 TFLOP/J accelerator-class efficiency
+MATCH_J = 1_000.0                # ~1 kJ: energy of one lit match
+WOOD_PILE_J = 1.6e10             # ~1 m^3 seasoned wood
+
+def main():
+    print("== bench_energy: paper sec 2 figs 10-12 (train vs infer) ==")
+    rows = [
+        # (model, params, train tokens)
+        ("nin-cifar10", 1.0e6, 50_000 * 100 * 1024),   # 100 epochs cifar
+        ("tinyllama-1.1b", get_config("tinyllama-1.1b").param_count(), 3e12),
+        ("llama3-8b", get_config("llama3-8b").param_count(), 15e12),
+    ]
+    out = {}
+    for name, n, d in rows:
+        train_j = 6 * n * d * JOULES_PER_FLOP
+        infer_j = 2 * n * 1000 * JOULES_PER_FLOP      # 1000-token response
+        row(f"{name} train", f"{train_j/WOOD_PILE_J:.2f}",
+            "wood-piles", f"{6*n*d:.2e} FLOPs")
+        row(f"{name} 1k-token inference", f"{infer_j/MATCH_J:.2e}",
+            "matches", f"asymmetry {train_j/infer_j:.1e}x")
+        out[name] = train_j / infer_j
+    ok = all(v > 1e6 for v in out.values())
+    row("claim train>>infer (>=1e6x)", "PASS" if ok else "FAIL")
+    print()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roadmap item 1: FFT-based convolution with precalculated filters.
+
+The paper cites fbfft [13]: FFT conv wins when kernel and map are large.
+This benchmark reports the analytic FLOP crossover and measures both
+implementations on this host for NIN's actual layer shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.fftconv import fft_conv2d, fft_conv_flops, precompute_filters
+from repro.core.graph import conv2d_ref
+
+
+def main():
+    print("== bench_fftconv: roadmap item 1 (FFT conv, precalc filters) ==")
+    key = jax.random.PRNGKey(0)
+    cases = [
+        # (name, C, O, H, K) — NIN block-1 conv is 5x5 on 32x32
+        ("nin conv1 5x5 @32", 3, 192, 32, 5),
+        ("nin conv2 5x5 @16", 96, 192, 16, 5),
+        ("nin mlpconv 1x1 @32", 192, 160, 32, 1),
+        ("large 7x7 @64", 64, 64, 64, 7),
+    ]
+    for name, c, o, h, k in cases:
+        direct_flops = 2 * h * h * c * o * k * k
+        fft_flops = fft_conv_flops(h, h, c, o, k)
+        x = jax.random.normal(key, (1, c, h, h))
+        w = jax.random.normal(key, (o, c, k, k)) * 0.1
+        pad = k // 2
+        t_direct = timeit(jax.jit(
+            lambda x, w: conv2d_ref(x, w, None, stride=1, pad=pad)), x, w)
+        t_fft = timeit(jax.jit(
+            lambda x, w: fft_conv2d(x, w, pad=pad)), x, w)
+        row(name,
+            f"{direct_flops/fft_flops:.2f}x", "flops",
+            f"measured: direct {t_direct*1e3:.2f}ms vs fft "
+            f"{t_fft*1e3:.2f}ms")
+    # precalculated-filter reuse saves the filter FFT per call
+    c, o, h, k = 64, 64, 64, 7
+    x = jax.random.normal(key, (1, c, h, h))
+    w = jax.random.normal(key, (o, c, k, k)) * 0.1
+    import repro.core.fftconv as fc
+    fh, fw = fc._fft_shape(h + 6, h + 6, k)
+    pre = precompute_filters(w, (fh, fw))
+    t_cold = timeit(jax.jit(lambda x, w: fft_conv2d(x, w, pad=3)), x, w)
+    t_pre = timeit(jax.jit(lambda x, p: fft_conv2d(x, w, pad=3, w_fft=p)),
+                   x, pre)
+    row("precalc-filter speedup", f"{t_cold/max(t_pre,1e-9):.2f}x", "",
+        f"{t_cold*1e3:.2f}ms -> {t_pre*1e3:.2f}ms")
+    print()
+    return {}
+
+
+if __name__ == "__main__":
+    main()

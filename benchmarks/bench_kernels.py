@@ -1,0 +1,65 @@
+"""Operator microbenchmarks: the paper's shader set in this framework.
+
+Times the pure-jnp (XLA-CPU) path — the Pallas kernels are validated in
+interpret mode by tests (they are TPU-target code; interpret-mode timing
+is meaningless).  Reports arithmetic intensity per op so the table maps
+onto any roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.graph import conv2d_ref, pool2d_ref
+from repro.kernels import ref
+
+
+def main():
+    print("== bench_kernels: operator set (conv/pool/relu/softmax/matmul) ==")
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    x = jax.random.normal(key, (8, 96, 32, 32))
+    w = jax.random.normal(key, (192, 96, 5, 5)) * 0.1
+    flops = 2 * 8 * 32 * 32 * 96 * 192 * 25
+    t = timeit(jax.jit(lambda x, w: conv2d_ref(x, w, None, pad=2)), x, w)
+    row("conv 5x5 96->192 @32 b8", f"{t*1e3:8.2f}", "ms",
+        f"{flops/t/1e9:.1f} GFLOP/s")
+    out["conv_gflops"] = flops / t / 1e9
+
+    t = timeit(jax.jit(lambda x: pool2d_ref(x, mode="max", kernel=3,
+                                            stride=2, pad=1)), x)
+    row("maxpool 3x3/2 @32 b8", f"{t*1e3:8.2f}", "ms")
+
+    a = jax.random.normal(key, (2048, 2048))
+    b = jax.random.normal(key, (2048, 2048))
+    t = timeit(jax.jit(lambda a, b: a @ b), a, b)
+    row("matmul 2048^3", f"{t*1e3:8.2f}", "ms",
+        f"{2*2048**3/t/1e9:.1f} GFLOP/s")
+    out["matmul_gflops"] = 2 * 2048 ** 3 / t / 1e9
+
+    s = jax.random.normal(key, (4096, 51865))       # whisper-vocab softmax
+    t = timeit(jax.jit(ref.softmax_ref), s)
+    row("softmax 4096x51865", f"{t*1e3:8.2f}", "ms",
+        f"{s.size*4*3/t/1e9:.1f} GB/s eff")
+
+    t = timeit(jax.jit(jax.nn.relu), s)
+    row("relu 4096x51865", f"{t*1e3:8.2f}", "ms",
+        f"{s.size*4*2/t/1e9:.1f} GB/s eff")
+
+    # attention: the transformer hot spot the TPU adaptation targets
+    q = jax.random.normal(key, (1, 2048, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2048, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2048, 2, 64), jnp.bfloat16)
+    from repro.models.common import attention_chunked
+    t = timeit(jax.jit(lambda q, k, v: attention_chunked(q, k, v)), q, k, v)
+    fl = 4 * 2048 * 2048 * 8 * 64
+    row("chunked attn S=2048 H=8", f"{t*1e3:8.2f}", "ms",
+        f"{fl/t/1e9:.1f} GFLOP/s")
+    print()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline summary table (deliverable g): reads the dry-run artifacts in
+experiments/dryrun/ and prints the three-term roofline per (arch x shape
+x mesh) with the dominant bottleneck and useful-FLOPs ratio.
+
+Run `python -m repro.launch.dryrun --all [--multi-pod]` first; this bench
+only formats + sanity-checks what the dry-run derived from compiled HLO.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load_results(d="experiments/dryrun"):
+    out = []
+    p = pathlib.Path(d)
+    if not p.exists():
+        return out
+    for fp in sorted(p.glob("*.json")):
+        out.append(json.loads(fp.read_text()))
+    return out
+
+
+def main():
+    print("== bench_roofline: three-term roofline from compiled dry-runs ==")
+    results = load_results()
+    if not results:
+        print("no dry-run artifacts found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all`")
+        return {}
+    hdr = (f"{'arch':>22s} {'shape':>12s} {'mesh':>8s} {'tag':>4s} "
+           f"{'compute':>10s} {'memory':>10s} {'collective':>11s} "
+           f"{'bound':>10s} {'useful':>7s}")
+    print(hdr)
+    counts = {"compute": 0, "memory": 0, "collective": 0}
+    for r in results:
+        rf = r["roofline"]
+        tag = "opt" if r.get("optimized") else "base"
+        print(f"{r['arch']:>22s} {r['shape']:>12s} {r['mesh']:>8s} "
+              f"{tag:>4s} "
+              f"{rf['compute_s']*1e3:9.2f}ms {rf['memory_s']*1e3:9.2f}ms "
+              f"{rf['collective_s']*1e3:10.2f}ms {rf['bottleneck']:>10s} "
+              f"{rf['useful_flops_ratio']:6.1%}")
+        if tag == "base" and r["mesh"] == "16x16":
+            counts[rf["bottleneck"]] += 1
+    print(f"\nbottleneck distribution (single-pod baselines): {counts}")
+    n_single = sum(1 for r in results
+                   if r["mesh"] == "16x16" and not r.get("optimized"))
+    n_multi = sum(1 for r in results
+                  if r["mesh"] == "2x16x16" and not r.get("optimized"))
+    print(f"coverage: {n_single}/40 single-pod, {n_multi}/40 multi-pod")
+    print()
+    return counts
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving-path benchmark: batched prefill/decode throughput + the
+100 ms Nielsen response-time budget the paper invokes (sec 1.1).
+
+Uses the reduced tinyllama config on this host — the point is the
+*framework* measurement (tok/s, prefill/decode split, model-switch cost),
+with the full-config numbers coming from the dry-run roofline instead.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import row
+from repro import models
+from repro.configs.base import get_config, reduced
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    print("== bench_serving: batched decode + Nielsen 100ms budget ==")
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for batch in (1, 4, 8):
+        eng = ServingEngine(cfg, params, max_batch=batch, cache_len=128)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i, prompt=list(rng.integers(1, 255, 16)),
+                        max_new_tokens=32) for i in range(batch)]
+        # warmup compile
+        eng.generate_batch([Request(uid=99, prompt=[1, 2], max_new_tokens=2)])
+        for r in reqs:
+            r.output, r.done = [], False
+        stats = eng.generate_batch(reqs)
+        row(f"batch={batch}", f"{stats.tok_per_s:8.1f}", "tok/s",
+            f"prefill {stats.prefill_s*1e3:.0f}ms decode "
+            f"{stats.decode_s*1e3:.0f}ms")
+        out[f"b{batch}"] = stats.tok_per_s
+    per_tok_ms = 1e3 / max(out["b1"], 1e-9)
+    row("per-token latency b=1", f"{per_tok_ms:.1f}", "ms",
+        "Nielsen instant-response budget = 100ms")
+    row("fits 100ms/token budget", "PASS" if per_tok_ms < 100 else "FAIL")
+    print()
+    return out
+
+
+if __name__ == "__main__":
+    main()

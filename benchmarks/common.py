@@ -1,0 +1,44 @@
+"""Shared benchmark utilities + the hardware book used for analytic
+rooflines.  Sources for the GPU numbers are the parts the paper names in
+section 1.1 (iPhone 5S = PowerVR G6430, iPhone 6S = PowerVR GT7600)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+
+# fp32 peak, memory bandwidth — public figures for the two PowerVR parts
+# the paper benchmarks (sec 1.1), plus the TPU v5e target of this repro.
+HARDWARE = {
+    # PowerVR G6430 (iPhone 5S, 4 clusters @ ~450MHz): ~115 GFLOPS fp32,
+    # LPDDR3 ~12.8 GB/s
+    "powervr_g6430": {"peak_flops": 115.2e9, "mem_bw": 12.8e9},
+    # PowerVR GT7600 (iPhone 6S, 6 clusters @ ~650MHz): ~250 GFLOPS fp32,
+    # LPDDR4 ~25.6 GB/s
+    "powervr_gt7600": {"peak_flops": 249.6e9, "mem_bw": 25.6e9},
+    # TPU v5e (the adaptation target): 197 TFLOP/s bf16, 819 GB/s HBM
+    "tpu_v5e": {"peak_flops": 197e12, "mem_bw": 819e9},
+}
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (after JIT warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def roofline_latency(flops: float, bytes_moved: float, hw: Dict) -> float:
+    """max(compute, memory) time — the standard two-term roofline."""
+    return max(flops / hw["peak_flops"], bytes_moved / hw["mem_bw"])
+
+
+def row(name: str, value, unit: str = "", note: str = ""):
+    print(f"{name:44s} {value!s:>14s} {unit:10s} {note}")

@@ -1,0 +1,53 @@
+"""Train -> publish -> serve: closing the paper's asymmetry loop.
+
+Section 2's thesis: training is expensive and happens once; the artifact
+is then reused many times from a model store.  This example trains a
+small transformer on the synthetic Zipf-Markov corpus until the loss
+visibly drops, publishes the checkpoint into the store (int8), reloads it
+through the serving engine, and generates.
+
+    PYTHONPATH=src python examples/train_publish_serve.py [--steps 150]
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import load_published
+from repro.core.modelstore import ModelStore
+from repro.launch.train import train
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as root:
+        _, losses = train(args.arch, steps=args.steps, batch=8, seq=128,
+                          publish_to=root, log_every=25)
+        drop = losses[0] - losses[-1]
+        print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(drop {drop:.3f}; must be > 0.3)")
+        assert drop > 0.3, "training did not learn"
+
+        store = ModelStore(root)
+        cfg, params, rec = load_published(store, args.arch)
+        print(f"reloaded {rec.name}:{rec.version} from the store")
+
+        eng = ServingEngine(cfg, params, max_batch=4, cache_len=128)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i, prompt=list(rng.integers(1, cfg.vocab_size,
+                                                        10)),
+                        max_new_tokens=12) for i in range(3)]
+        stats = eng.generate_batch(reqs)
+        for r in reqs:
+            print(f"req {r.uid}: {r.prompt[:6]}... -> {r.output}")
+        print(f"{stats.tokens_out} tokens at {stats.tok_per_s:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

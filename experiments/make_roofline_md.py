@@ -1,0 +1,49 @@
+"""Regenerate the §Roofline markdown table from dry-run JSON artifacts.
+
+    PYTHONPATH=src python experiments/make_roofline_md.py [--mesh 16x16]
+"""
+import argparse
+import json
+import pathlib
+
+ARCH_ORDER = ["rwkv6-3b", "whisper-medium", "qwen3-8b", "chameleon-34b",
+              "tinyllama-1.1b", "qwen3-0.6b", "qwen3-moe-235b-a22b",
+              "recurrentgemma-9b", "llama3-8b", "granite-moe-3b-a800m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f} s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f} ms"
+    return f"{x*1e6:.0f} µs"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--opt", action="store_true")
+    args = ap.parse_args()
+    d = pathlib.Path(__file__).parent / "dryrun"
+    rows = {}
+    for fp in sorted(d.glob("*.json")):
+        r = json.loads(fp.read_text())
+        if r["mesh"] != args.mesh or bool(r.get("optimized")) != args.opt:
+            continue
+        rows[(r["arch"], r["shape"])] = r
+    print("| arch | shape | compute | memory | collective | bound | useful |")
+    print("|---|---|---:|---:|---:|---|---:|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                continue
+            rf = r["roofline"]
+            print(f"| {a} | {s} | {fmt_s(rf['compute_s'])} | "
+                  f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                  f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.0%} |")
+
+
+if __name__ == "__main__":
+    main()

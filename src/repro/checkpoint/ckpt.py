@@ -1,0 +1,73 @@
+"""Checkpointing: train state <-> model-store artifacts.
+
+The paper's section-2 thesis is train-once / reuse-everywhere, so the
+trainer's checkpoint format IS a model-store publish: params plus training
+metadata land in the same versioned, hash-verified layout the serving
+engine loads from.  ``save_train_state``/``restore_train_state`` also
+round-trip optimizer state for resumption.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modelstore import (ModelStore, flatten_params,
+                                   unflatten_params)
+from repro.optim.adamw import AdamWState
+
+
+def save_train_state(path, params, opt_state: Optional[AdamWState] = None,
+                     metadata: Optional[Dict[str, Any]] = None):
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez(path / "params.npz", **flatten_params(params))
+    if opt_state is not None:
+        np.savez(path / "opt_m.npz", **flatten_params(opt_state.m))
+        np.savez(path / "opt_v.npz", **flatten_params(opt_state.v))
+        (path / "opt_step.json").write_text(
+            json.dumps({"step": int(opt_state.step)}))
+    (path / "metadata.json").write_text(json.dumps(metadata or {}))
+    return path
+
+
+def restore_train_state(path) -> Tuple[Any, Optional[AdamWState],
+                                       Dict[str, Any]]:
+    path = pathlib.Path(path)
+    params = unflatten_params(dict(np.load(path / "params.npz")))
+    opt_state = None
+    if (path / "opt_m.npz").exists():
+        m = unflatten_params(dict(np.load(path / "opt_m.npz")))
+        v = unflatten_params(dict(np.load(path / "opt_v.npz")))
+        step = json.loads((path / "opt_step.json").read_text())["step"]
+        opt_state = AdamWState(jnp.asarray(step, jnp.int32), m, v)
+    metadata = json.loads((path / "metadata.json").read_text())
+    return params, opt_state, metadata
+
+
+def publish_checkpoint(store: ModelStore, name: str, cfg, params, *,
+                       metadata: Optional[Dict[str, Any]] = None,
+                       int8: bool = False, version: Optional[str] = None):
+    """Publish a trained transformer into the model store (the paper's
+    App Store upload step)."""
+    import dataclasses
+    spec = {"format": "repro-archconfig-v1",
+            "arch": dataclasses.asdict(cfg),
+            "metadata": metadata or {}}
+    return store.publish(name, spec, params, kind="transformer",
+                         int8=int8, version=version)
+
+
+def load_published(store: ModelStore, name: str,
+                   version: Optional[str] = None):
+    from repro.configs.base import ArchConfig
+    rec = store.get(name, version)
+    spec = rec.load_spec()
+    assert spec["format"] == "repro-archconfig-v1", spec.get("format")
+    cfg = ArchConfig(**spec["arch"])
+    params = rec.load_params()
+    return cfg, params, rec

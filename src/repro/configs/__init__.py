@@ -1,0 +1,8 @@
+from repro.configs.base import (
+    ArchConfig, ShapeSpec, SHAPES, get_config, list_configs, reduced,
+)
+
+__all__ = [
+    "ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_configs",
+    "reduced",
+]

@@ -1,0 +1,11 @@
+"""The paper's contribution: on-device inference infrastructure.
+
+graph       layer-DAG runtime (the Metal pipeline equivalent)
+importer    Caffe-like JSON model interchange (paper section 3)
+modelstore  App Store for Deep Learning Models (paper section 2)
+engine      command-queue inference engine (paper figure 2)
+quantize    reduced precision (roadmap item 2)
+compress    low-rank / pruning compression (roadmap items 7, 8)
+fftconv     FFT convolution (roadmap item 1)
+selector    context meta-model for model selection (paper section 2)
+"""

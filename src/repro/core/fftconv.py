@@ -1,0 +1,82 @@
+"""FFT-based convolution — DeepLearningKit roadmap item 1.
+
+"use FFT-based convolution — with precalculated convolution filters
+[fbfft, convnet-benchmarks]".  Convolution in the spatial domain is a
+pointwise product in the frequency domain; for large feature maps / large
+kernels the O(HW log HW) transform beats the O(HW K^2) direct form.  The
+paper's roadmap pairs this with storing *precalculated* filter FFTs —
+``precompute_filters`` does exactly that, so serving pays only the input
+transform per call.
+
+There is no FFT primitive inside Pallas, so this op lives at the JAX level
+(XLA lowers jnp.fft to the TPU FFT HLO); it is still exercised by the CNN
+benchmarks and validated against the direct conv oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _fft_shape(h: int, w: int, k: int) -> Tuple[int, int]:
+    # linear convolution needs H+K-1 points; round up to the next power of
+    # two for FFT efficiency
+    def np2(n):
+        p = 1
+        while p < n:
+            p *= 2
+        return p
+    return np2(h + k - 1), np2(w + k - 1)
+
+
+def precompute_filters(w: jax.Array, out_hw: Tuple[int, int]):
+    """w: (O, C, K, K) -> rfft2 of the *flipped* kernel, padded to out_hw.
+
+    Cross-correlation (what conv layers compute) equals convolution with a
+    spatially flipped kernel, so flip here once, at model-publish time.
+    """
+    wf = w[:, :, ::-1, ::-1]
+    return jnp.fft.rfft2(wf, out_hw)
+
+
+def fft_conv2d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
+               stride: int = 1, pad: int = 0,
+               w_fft: Optional[jax.Array] = None):
+    """FFT convolution matching conv2d_ref semantics.
+
+    x: (B, C, H, W); w: (O, C, K, K).  Pass ``w_fft`` (from
+    ``precompute_filters``) to skip the filter transform (the roadmap's
+    "precalculated convolution filters").
+    """
+    bsz, c, h, wd = x.shape
+    o, _, k, _ = w.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        h, wd = h + 2 * pad, wd + 2 * pad
+    fh, fw = _fft_shape(h, wd, k)
+    if w_fft is None:
+        w_fft = precompute_filters(w, (fh, fw))
+    x_fft = jnp.fft.rfft2(x, (fh, fw))                     # (B, C, fh, fw')
+    prod = jnp.einsum("bchw,ochw->bohw", x_fft, w_fft)
+    full = jnp.fft.irfft2(prod, (fh, fw))                  # linear conv
+    # 'valid' part of the linear convolution = cross-correlation output
+    oh, ow = h - k + 1, wd - k + 1
+    out = full[:, :, k - 1:k - 1 + oh, k - 1:k - 1 + ow]
+    if stride > 1:
+        out = out[:, :, ::stride, ::stride]
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out.astype(x.dtype)
+
+
+def fft_conv_flops(h: int, w: int, c: int, o: int, k: int) -> int:
+    """Analytic FLOP estimate (for the crossover analysis in benchmarks)."""
+    import math
+    fh, fw = _fft_shape(h, w, k)
+    fft_pts = fh * fw
+    logf = math.log2(fft_pts)
+    # input FFTs + output iFFTs + pointwise complex products
+    return int(5 * fft_pts * logf * (c + o) + 8 * fft_pts * c * o)

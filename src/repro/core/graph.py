@@ -1,0 +1,289 @@
+"""Layer-graph execution engine — the DeepLearningKit network runtime.
+
+The paper's Swift layer builds a convolutional-network pipeline from an
+imported (Caffe->JSON) description and dispatches one Metal shader per
+layer.  Here the same role is played by a small layer IR:
+
+    spec (list of layer dicts)  ->  Graph  ->  jitted apply(params, x)
+
+Supported ops mirror the paper's shader set — convolution, pooling,
+rectifier, softmax — plus dense/flatten (LeNet head) and the roadmap's
+FFT convolution.  Each op has a pure-jnp implementation here (the oracle
+and CPU path); the Pallas TPU kernels in repro.kernels implement the
+perf-critical ones and are selected with use_pallas=True.
+
+``memory_plan`` implements roadmap item 5 (in-place calculation / buffer
+reuse): a liveness scan over the sequential graph that assigns each
+activation to a reusable slot, reporting peak bytes with and without
+reuse.  (JAX/XLA does this internally for real execution; the planner
+makes the saving measurable and testable, as the Swift engine did
+explicitly with MTLBuffer reuse.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@dataclass
+class Layer:
+    kind: str                 # conv | pool | relu | softmax | dense | flatten
+    name: str
+    attrs: Dict[str, Any]
+
+    def out_shape(self, in_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        a = self.attrs
+        if self.kind == "conv":
+            c, h, w = in_shape
+            k, s, p = a["kernel"], a["stride"], a["pad"]
+            oh = (h + 2 * p - k) // s + 1
+            ow = (w + 2 * p - k) // s + 1
+            return (a["out_channels"], oh, ow)
+        if self.kind == "pool":
+            c, h, w = in_shape
+            k, s, p = a["kernel"], a["stride"], a["pad"]
+            oh = (h + 2 * p - k) // s + 1
+            ow = (w + 2 * p - k) // s + 1
+            return (c, oh, ow)
+        if self.kind in ("relu", "softmax"):
+            return in_shape
+        if self.kind == "flatten":
+            return (int(np.prod(in_shape)),)
+        if self.kind == "dense":
+            return (a["out_features"],)
+        raise ValueError(self.kind)
+
+
+class Graph:
+    """Sequential layer graph (the paper's networks are all chains)."""
+
+    def __init__(self, name: str, input_shape: Tuple[int, ...],
+                 layers: List[Layer]):
+        self.name = name
+        self.input_shape = tuple(input_shape)
+        self.layers = layers
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: Dict[str, Any]) -> "Graph":
+        """Build from the compact block spec used in repro.configs."""
+        layers: List[Layer] = []
+        shape = tuple(spec["input"])
+        for i, blk in enumerate(spec["blocks"]):
+            if "conv" in blk:
+                oc, k, s, p = blk["conv"]
+                layers.append(Layer("conv", f"conv{i}", dict(
+                    out_channels=oc, kernel=k, stride=s, pad=p)))
+            elif "pool" in blk:
+                mode, k, s, p = blk["pool"]
+                layers.append(Layer("pool", f"pool{i}", dict(
+                    mode=mode, kernel=k, stride=s, pad=p)))
+            elif "relu" in blk:
+                layers.append(Layer("relu", f"relu{i}", {}))
+            elif "softmax" in blk:
+                layers.append(Layer("softmax", f"softmax{i}", {}))
+            elif "flatten" in blk:
+                layers.append(Layer("flatten", f"flatten{i}", {}))
+            elif "dense" in blk:
+                layers.append(Layer("dense", f"dense{i}", dict(
+                    out_features=blk["dense"])))
+            else:
+                raise ValueError(f"unknown block {blk}")
+        return cls(spec["name"], shape, layers)
+
+    # -- shapes / params ----------------------------------------------------
+
+    def shapes(self) -> List[Tuple[int, ...]]:
+        """Activation shape after every layer (excluding batch dim)."""
+        out = []
+        s = self.input_shape
+        for l in self.layers:
+            if l.kind == "conv" and "in_channels" not in l.attrs:
+                l.attrs["in_channels"] = s[0]
+            if l.kind == "dense" and "in_features" not in l.attrs:
+                l.attrs["in_features"] = int(np.prod(s))
+            s = l.out_shape(s)
+            out.append(s)
+        return out
+
+    def init_params(self, key) -> Dict[str, Dict[str, jax.Array]]:
+        self.shapes()  # resolve in_channels/in_features
+        params: Dict[str, Dict[str, jax.Array]] = {}
+        for l in self.layers:
+            key, sub = jax.random.split(key)
+            if l.kind == "conv":
+                a = l.attrs
+                fan_in = a["in_channels"] * a["kernel"] ** 2
+                w = jax.random.normal(
+                    sub, (a["out_channels"], a["in_channels"],
+                          a["kernel"], a["kernel"])) * math.sqrt(2 / fan_in)
+                params[l.name] = {"w": w.astype(jnp.float32),
+                                  "b": jnp.zeros((a["out_channels"],))}
+            elif l.kind == "dense":
+                a = l.attrs
+                w = jax.random.normal(sub, (a["in_features"],
+                                            a["out_features"])) \
+                    * math.sqrt(2 / a["in_features"])
+                params[l.name] = {"w": w.astype(jnp.float32),
+                                  "b": jnp.zeros((a["out_features"],))}
+        return params
+
+    # -- execution ----------------------------------------------------------
+
+    def apply(self, params, x, *, use_pallas: bool = False,
+              fft_conv: bool = False):
+        """x: (B, C, H, W) or (B, F). Returns the network output."""
+        if use_pallas or fft_conv:
+            from repro.kernels import ops as kops
+        for l in self.layers:
+            if l.kind == "conv":
+                p = params[l.name]
+                if fft_conv:
+                    from repro.core.fftconv import fft_conv2d
+                    x = fft_conv2d(x, p["w"], p["b"], stride=l.attrs["stride"],
+                                   pad=l.attrs["pad"])
+                elif use_pallas:
+                    x = kops.conv2d(x, p["w"], p["b"],
+                                    stride=l.attrs["stride"],
+                                    pad=l.attrs["pad"])
+                else:
+                    x = conv2d_ref(x, p["w"], p["b"],
+                                   stride=l.attrs["stride"],
+                                   pad=l.attrs["pad"])
+            elif l.kind == "pool":
+                a = l.attrs
+                if use_pallas:
+                    x = kops.pool2d(x, mode=a["mode"], kernel=a["kernel"],
+                                    stride=a["stride"], pad=a["pad"])
+                else:
+                    x = pool2d_ref(x, mode=a["mode"], kernel=a["kernel"],
+                                   stride=a["stride"], pad=a["pad"])
+            elif l.kind == "relu":
+                x = kops.relu(x) if use_pallas else jax.nn.relu(x)
+            elif l.kind == "softmax":
+                x = x.reshape(x.shape[0], -1)
+                x = kops.softmax(x) if use_pallas else jax.nn.softmax(x, -1)
+            elif l.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif l.kind == "dense":
+                p = params[l.name]
+                x = x @ p["w"] + p["b"]
+        return x
+
+    def jit_apply(self, **kw):
+        return jax.jit(lambda p, x: self.apply(p, x, **kw))
+
+    # -- analysis -----------------------------------------------------------
+
+    def flops(self, batch: int = 1) -> int:
+        """Multiply-add FLOPs (2*MACs) for one forward pass."""
+        total = 0
+        s = self.input_shape
+        for l in self.layers:
+            o = l.out_shape(s)
+            a = l.attrs
+            if l.kind == "conv":
+                total += 2 * int(np.prod(o)) * a["in_channels"] * a["kernel"] ** 2
+            elif l.kind == "dense":
+                total += 2 * a["in_features"] * a["out_features"]
+            elif l.kind == "pool":
+                total += int(np.prod(o)) * a["kernel"] ** 2
+            else:
+                total += int(np.prod(o))
+            s = o
+        return total * batch
+
+    def bytes_moved(self, batch: int = 1, elem: int = 4) -> int:
+        """Activation + weight traffic for one pass (no reuse)."""
+        total = int(np.prod(self.input_shape)) * elem
+        s = self.input_shape
+        for l in self.layers:
+            o = l.out_shape(s)
+            total += int(np.prod(o)) * elem
+            a = l.attrs
+            if l.kind == "conv":
+                total += a["out_channels"] * a["in_channels"] * a["kernel"] ** 2 * elem
+            elif l.kind == "dense":
+                total += a["in_features"] * a["out_features"] * elem
+            s = o
+        return total * batch
+
+    def memory_plan(self, batch: int = 1, elem: int = 4) -> Dict[str, Any]:
+        """Liveness-based buffer-slot assignment (roadmap item 5).
+
+        For a chain, activation i is live only while computing i+1, so two
+        ping-pong slots sized by the largest adjacent pair suffice; ops that
+        can run in place (relu, softmax) reuse their input slot outright.
+        """
+        shapes = [self.input_shape] + self.shapes()
+        sizes = [int(np.prod(s)) * elem * batch for s in shapes]
+        inplace = {"relu", "softmax", "flatten"}
+        naive = sum(sizes)
+        slots: List[int] = []          # slot -> current byte size
+        assignment: List[Tuple[str, int, int]] = []
+        cur_slot = 0
+        slots.append(sizes[0])
+        for i, l in enumerate(self.layers):
+            out_sz = sizes[i + 1]
+            if l.kind in inplace:
+                slot = cur_slot      # in-place: reuse the input slot
+                slots[slot] = max(slots[slot], out_sz)
+            else:
+                slot = 1 - cur_slot if len(slots) > 1 else len(slots)
+                if slot >= len(slots):
+                    slots.append(out_sz)
+                else:
+                    slots[slot] = max(slots[slot], out_sz)
+                cur_slot = slot
+            assignment.append((l.name, slot, out_sz))
+        planned = sum(slots)
+        return {
+            "naive_bytes": naive,
+            "planned_bytes": planned,
+            "savings_ratio": naive / max(planned, 1),
+            "num_slots": len(slots),
+            "assignment": assignment,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp layer implementations (oracles for the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_ref(x, w, b=None, *, stride: int = 1, pad: int = 0):
+    """x: (B, C, H, W); w: (O, C, K, K)."""
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+def pool2d_ref(x, *, mode: str = "max", kernel: int = 2, stride: int = 2,
+               pad: int = 0):
+    if mode == "max":
+        init, op = -jnp.inf, lax.max
+    else:
+        init, op = 0.0, lax.add
+    out = lax.reduce_window(
+        x, init, op, (1, 1, kernel, kernel), (1, 1, stride, stride),
+        [(0, 0), (0, 0), (pad, pad), (pad, pad)])
+    if mode == "avg":
+        ones = jnp.ones_like(x)
+        denom = lax.reduce_window(
+            ones, 0.0, lax.add, (1, 1, kernel, kernel),
+            (1, 1, stride, stride),
+            [(0, 0), (0, 0), (pad, pad), (pad, pad)])
+        out = out / denom
+    return out

@@ -1,0 +1,149 @@
+"""Caffe-like JSON model interchange — the paper's importer (section 3).
+
+DeepLearningKit "supports converting trained Caffe models to JSON (ready
+to be uploaded to app store) and then importing into Swift/Metal".  The
+schema here mirrors a flattened Caffe prototxt + caffemodel: a layer list
+with Caffe type names and layer params, weights inline (list) or in a
+sidecar .npz — the same two-file split the paper's converter produced.
+
+    {"name": "nin-cifar10", "input_dim": [3, 32, 32],
+     "layers": [
+        {"type": "Convolution", "name": "conv1",
+         "convolution_param": {"num_output": 192, "kernel_size": 5,
+                               "stride": 1, "pad": 2}},
+        {"type": "ReLU", "name": "relu1"},
+        {"type": "Pooling", "name": "pool1",
+         "pooling_param": {"pool": "MAX", "kernel_size": 3, "stride": 2,
+                           "pad": 1}},
+        {"type": "InnerProduct", "name": "ip1",
+         "inner_product_param": {"num_output": 500}},
+        {"type": "Flatten" | "Softmax", ...}]}
+
+``to_caffe_json``/``from_caffe_json`` round-trip Graph+params through this
+schema; tests assert the round trip is exact.
+"""
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, Layer
+
+_POOL_MODES = {"MAX": "max", "AVE": "avg"}
+_POOL_MODES_INV = {v: k for k, v in _POOL_MODES.items()}
+
+
+def to_caffe_json(graph: Graph, params=None, *, inline_weights: bool = False
+                  ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+    """Returns (json_dict, weight_arrays).  Weights go inline (lists) when
+    ``inline_weights`` else into the sidecar dict (stored as .npz)."""
+    layers = []
+    weights: Dict[str, np.ndarray] = {}
+    for l in graph.layers:
+        a = l.attrs
+        if l.kind == "conv":
+            entry = {"type": "Convolution", "name": l.name,
+                     "convolution_param": {
+                         "num_output": a["out_channels"],
+                         "kernel_size": a["kernel"], "stride": a["stride"],
+                         "pad": a["pad"]}}
+        elif l.kind == "pool":
+            entry = {"type": "Pooling", "name": l.name,
+                     "pooling_param": {
+                         "pool": _POOL_MODES_INV[a["mode"]],
+                         "kernel_size": a["kernel"], "stride": a["stride"],
+                         "pad": a["pad"]}}
+        elif l.kind == "relu":
+            entry = {"type": "ReLU", "name": l.name}
+        elif l.kind == "softmax":
+            entry = {"type": "Softmax", "name": l.name}
+        elif l.kind == "flatten":
+            entry = {"type": "Flatten", "name": l.name}
+        elif l.kind == "dense":
+            entry = {"type": "InnerProduct", "name": l.name,
+                     "inner_product_param": {"num_output": a["out_features"]}}
+        else:
+            raise ValueError(l.kind)
+        if params is not None and l.name in params:
+            for pname, arr in params[l.name].items():
+                arr = np.asarray(arr)
+                if inline_weights:
+                    entry.setdefault("blobs", {})[pname] = {
+                        "shape": list(arr.shape),
+                        "data": arr.ravel().tolist()}
+                else:
+                    weights[f"{l.name}/{pname}"] = arr
+        layers.append(entry)
+    doc = {"name": graph.name, "format": "deeplearningkit-json-v1",
+           "input_dim": list(graph.input_shape), "layers": layers}
+    return doc, weights
+
+
+def from_caffe_json(doc: Dict[str, Any],
+                    weights: Optional[Dict[str, np.ndarray]] = None
+                    ) -> Tuple[Graph, Dict[str, Dict[str, jax.Array]]]:
+    layers = []
+    params: Dict[str, Dict[str, jax.Array]] = {}
+    for entry in doc["layers"]:
+        t, name = entry["type"], entry["name"]
+        if t == "Convolution":
+            p = entry["convolution_param"]
+            layers.append(Layer("conv", name, dict(
+                out_channels=p["num_output"], kernel=p["kernel_size"],
+                stride=p.get("stride", 1), pad=p.get("pad", 0))))
+        elif t == "Pooling":
+            p = entry["pooling_param"]
+            layers.append(Layer("pool", name, dict(
+                mode=_POOL_MODES[p.get("pool", "MAX")],
+                kernel=p["kernel_size"], stride=p.get("stride", 1),
+                pad=p.get("pad", 0))))
+        elif t == "ReLU":
+            layers.append(Layer("relu", name, {}))
+        elif t == "Softmax":
+            layers.append(Layer("softmax", name, {}))
+        elif t == "Flatten":
+            layers.append(Layer("flatten", name, {}))
+        elif t == "InnerProduct":
+            p = entry["inner_product_param"]
+            layers.append(Layer("dense", name, dict(
+                out_features=p["num_output"])))
+        else:
+            raise ValueError(f"unsupported Caffe layer type {t!r}")
+        blob = entry.get("blobs")
+        if blob:
+            params[name] = {
+                pn: jnp.asarray(np.asarray(b["data"], np.float32)
+                                .reshape(b["shape"]))
+                for pn, b in blob.items()}
+    if weights:
+        for key, arr in weights.items():
+            lname, pname = key.split("/", 1)
+            params.setdefault(lname, {})[pname] = jnp.asarray(arr)
+    graph = Graph(doc["name"], tuple(doc["input_dim"]), layers)
+    graph.shapes()  # resolve in_channels / in_features
+    return graph, params
+
+
+def save_model(path, graph: Graph, params, *, inline_weights=False):
+    """Write <path>.json (+ <path>.npz when weights are sidecar)."""
+    import pathlib
+    path = pathlib.Path(path)
+    doc, weights = to_caffe_json(graph, params, inline_weights=inline_weights)
+    path.with_suffix(".json").write_text(json.dumps(doc))
+    if weights:
+        np.savez(path.with_suffix(".npz"), **weights)
+    return path.with_suffix(".json")
+
+
+def load_model(path):
+    import pathlib
+    path = pathlib.Path(path)
+    doc = json.loads(path.with_suffix(".json").read_text())
+    npz = path.with_suffix(".npz")
+    weights = dict(np.load(npz)) if npz.exists() else None
+    return from_caffe_json(doc, weights)

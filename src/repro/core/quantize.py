@@ -1,0 +1,88 @@
+"""Reduced-precision weights — roadmap item 2 + the section-2 compression story.
+
+Symmetric per-channel int8 quantization (plus fp16/bf16 casts) over whole
+parameter pytrees.  ``quantize_tree``/``dequantize_tree`` are what the
+model store uses to publish compressed artifacts ("AlexNet 240MB -> 6.9MB"
+territory when combined with repro.core.compress), and QTensor feeds the
+int8 MXU kernel in repro.kernels.int8_matmul directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class QTensor:
+    """Per-channel symmetric int8 tensor. scale is along ``axis``."""
+    q: jax.Array          # int8, same shape as original
+    scale: jax.Array      # f32, shape = (shape[axis],)
+    axis: int
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self, dtype=jnp.float32):
+        s = jnp.expand_dims(self.scale,
+                            [i for i in range(self.q.ndim) if i != self.axis])
+        return (self.q.astype(jnp.float32) * s).astype(dtype)
+
+
+def quantize(x: jax.Array, axis: int = -1) -> QTensor:
+    """Symmetric per-channel int8: scale = absmax / 127."""
+    axis = axis % x.ndim
+    red = tuple(i for i in range(x.ndim) if i != axis)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    s = jnp.expand_dims(scale, red)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return QTensor(q.astype(jnp.int8), scale, axis)
+
+
+def quantization_error(x: jax.Array, qt: QTensor) -> float:
+    """Relative L2 reconstruction error."""
+    d = qt.dequantize()
+    num = jnp.linalg.norm((x - d).ravel())
+    den = jnp.maximum(jnp.linalg.norm(x.ravel()), 1e-12)
+    return float(num / den)
+
+
+def _is_quantizable(x) -> bool:
+    return (isinstance(x, (jax.Array, np.ndarray)) and x.ndim >= 2
+            and jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def quantize_tree(params, axis: int = -1):
+    """int8-quantize every >=2D float leaf; smaller leaves pass through."""
+    return jax.tree.map(
+        lambda x: quantize(x, axis) if _is_quantizable(x) else x, params)
+
+
+def dequantize_tree(params, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda x: x.dequantize(dtype) if isinstance(x, QTensor) else x,
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def tree_bytes(params) -> int:
+    def nbytes(x):
+        if isinstance(x, QTensor):
+            return x.q.size * 1 + x.scale.size * 4
+        return x.size * x.dtype.itemsize
+    return int(sum(jax.tree.leaves(jax.tree.map(
+        nbytes, params, is_leaf=lambda x: isinstance(x, QTensor)))))
+
+
+def compression_ratio(params) -> float:
+    """fp32 bytes / quantized bytes for a quantized tree."""
+    orig = int(sum(4 * l.q.size if isinstance(l, QTensor)
+                   else l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(
+                       params, is_leaf=lambda x: isinstance(x, QTensor))))
+    return orig / max(tree_bytes(params), 1)

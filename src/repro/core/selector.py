@@ -1,0 +1,89 @@
+"""Meta-model for on-device model selection — section 2's closing idea.
+
+"We have some ideas for a meta model for selecting a model to use, which
+can use input like location, time of day, and camera history to predict
+which models might be most relevant."
+
+Implemented as a tiny softmax-regression over a hand-built context
+featurization (cyclic time encoding, location one-hot, camera-history
+class histogram), trained by full-batch gradient descent in JAX.  The
+serving engine consults it to pre-warm the ResidentCache with the top-k
+predicted models — cross-model ranking with a latency budget, as the
+paper frames it ("resembles the meta or universal search problem").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ContextSpec:
+    num_locations: int = 8
+    history_classes: int = 10
+
+    @property
+    def dim(self) -> int:
+        # sin/cos hour + weekday one-hot(7) + location + history histogram
+        return 2 + 7 + self.num_locations + self.history_classes
+
+
+def featurize(spec: ContextSpec, *, hour: float, weekday: int,
+              location: int, history: Sequence[float]) -> jnp.ndarray:
+    ang = 2 * np.pi * hour / 24.0
+    f = [np.sin(ang), np.cos(ang)]
+    wd = np.zeros(7); wd[weekday % 7] = 1.0
+    loc = np.zeros(spec.num_locations); loc[location % spec.num_locations] = 1.0
+    hist = np.asarray(history, np.float32)
+    hist = hist / max(hist.sum(), 1e-9)
+    assert hist.shape[0] == spec.history_classes
+    return jnp.asarray(np.concatenate([f, wd, loc, hist]), jnp.float32)
+
+
+class MetaSelector:
+    """Softmax regression: context features -> distribution over models."""
+
+    def __init__(self, spec: ContextSpec, model_names: List[str], seed=0):
+        self.spec = spec
+        self.model_names = list(model_names)
+        k = jax.random.PRNGKey(seed)
+        self.w = 0.01 * jax.random.normal(
+            k, (spec.dim, len(model_names)), jnp.float32)
+        self.b = jnp.zeros((len(model_names),), jnp.float32)
+
+    def logits(self, feats: jnp.ndarray) -> jnp.ndarray:
+        return feats @ self.w + self.b
+
+    def rank(self, feats: jnp.ndarray) -> List[str]:
+        order = np.argsort(-np.asarray(self.logits(feats)))
+        return [self.model_names[i] for i in order]
+
+    def select(self, feats: jnp.ndarray, k: int = 1) -> List[str]:
+        return self.rank(feats)[:k]
+
+    def fit(self, feats: jnp.ndarray, labels: jnp.ndarray, *,
+            steps: int = 300, lr: float = 0.5) -> float:
+        """Full-batch GD on softmax cross-entropy. Returns final loss."""
+
+        def loss_fn(wb):
+            w, b = wb
+            lg = feats @ w + b
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+        grad = jax.jit(jax.value_and_grad(loss_fn))
+        wb = (self.w, self.b)
+        for _ in range(steps):
+            l, g = grad(wb)
+            wb = jax.tree.map(lambda p, gg: p - lr * gg, wb, g)
+        self.w, self.b = wb
+        return float(l)
+
+    def accuracy(self, feats: jnp.ndarray, labels: jnp.ndarray) -> float:
+        pred = jnp.argmax(feats @ self.w + self.b, axis=-1)
+        return float((pred == labels).mean())

@@ -1,0 +1,62 @@
+"""Convolution for the MXU: im2col + tiled block matmul.
+
+DeepLearningKit's Metal convolution shader assigns one GPU thread per
+output pixel.  A TPU has no independent threads — its throughput lives in
+the 128x128 systolic MXU — so the faithful *adaptation* (per DESIGN.md
+section 2) restructures convolution as:
+
+    patches = im2col(x)            # (B*OH*OW, C*K*K)  data layout pass
+    out     = patches @ W^T + b    # one big MXU matmul (+ fused ReLU)
+
+The patch extraction is a strided gather XLA handles well; the matmul is
+the Pallas kernel in repro.kernels.matmul with explicit VMEM BlockSpec
+tiling.  For NIN's 1x1 "mlpconv" layers im2col degenerates to a reshape,
+which is exactly why NIN maps so well onto matmul hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.matmul import matmul
+
+
+def im2col(x: jax.Array, kernel: int, stride: int, pad: int):
+    """x: (B, C, H, W) -> (B*OH*OW, C*K*K) patch matrix."""
+    b, c, h, w = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        h, w = h + 2 * pad, w + 2 * pad
+    oh = (h - kernel) // stride + 1
+    ow = (w - kernel) // stride + 1
+    if kernel == 1 and stride == 1:
+        cols = x.transpose(0, 2, 3, 1).reshape(b * oh * ow, c)
+        return cols, (b, oh, ow)
+    # gather K*K shifted strided views: (B, C, K, K, OH, OW)
+    idx_h = jnp.arange(oh) * stride
+    idx_w = jnp.arange(ow) * stride
+    views = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            v = lax.dynamic_slice(x, (0, 0, di, dj),
+                                  (b, c, h - kernel + 1, w - kernel + 1))
+            views.append(v[:, :, ::stride, ::stride])
+    cols = jnp.stack(views, axis=2)               # (B, C, K*K, OH, OW)
+    cols = cols.transpose(0, 3, 4, 1, 2).reshape(b * oh * ow, c * kernel ** 2)
+    return cols, (b, oh, ow)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
+           stride: int = 1, pad: int = 0, activation: str = "none",
+           interpret: bool = False) -> jax.Array:
+    """x: (B, C, H, W); w: (O, C, K, K) -> (B, O, OH, OW)."""
+    o, c, k, _ = w.shape
+    cols, (bsz, oh, ow) = im2col(x, k, stride, pad)
+    wmat = w.reshape(o, c * k * k).T              # (C*K*K, O)
+    out = matmul(cols, wmat.astype(cols.dtype), bias=b,
+                 activation=activation, interpret=interpret,
+                 out_dtype=x.dtype)
+    return out.reshape(bsz, oh, ow, o).transpose(0, 3, 1, 2)

@@ -1,0 +1,88 @@
+"""Flash-decode: one-token attention against a long KV cache.
+
+Beyond-paper kernel for the decode_32k / long_500k shapes: the KV cache is
+streamed through VMEM in blocks along the sequence (grid-innermost, so
+sequential with scratch carry), with online softmax over the valid prefix.
+GQA is handled by processing all G query heads of one KV head together —
+the (G, D) query tile rides along the whole stream, maximizing cache-byte
+reuse (the decode bottleneck is HBM bandwidth on cache reads).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale, bs, ns):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G,bs)
+    spos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(spos < valid_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, block_s: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D); k, v: (B, S, KV, D); valid_len: scalar int32."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bs = min(block_s, s)
+    pad = (-s) % bs
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, zp), jnp.pad(v, zp)
+    ns = (s + pad) // bs
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+    valid = jnp.full((1,), valid_len, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns),
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, qg, k, v)
+    return out.reshape(b, h, d)

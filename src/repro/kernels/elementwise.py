@@ -1,0 +1,52 @@
+"""Elementwise activation kernels — the paper's rectifier shader.
+
+The Metal/OpenCL rectifier in the paper's figures 3-4 is a one-line
+per-element shader; the TPU version processes (8,128)-aligned VMEM tiles
+on the VPU.  Kept standalone (not only fused into matmul) because the
+graph engine also applies activations after pooling / non-matmul layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def _ew_kernel(x_ref, o_ref, *, act):
+    o_ref[...] = _ACTS[act](x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def elementwise(x: jax.Array, act: str = "relu", *, block: int = 65536,
+                interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    lanes = 128
+    rows = max(8, min(512, block // lanes))
+    per_block = rows * lanes
+    npad = (-n) % per_block
+    xp = jnp.pad(flat, (0, npad)).reshape(-1, lanes)
+    nb = xp.shape[0] // rows
+    out = pl.pallas_call(
+        functools.partial(_ew_kernel, act=act),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def relu(x: jax.Array, **kw) -> jax.Array:
+    return elementwise(x, "relu", **kw)

@@ -1,0 +1,97 @@
+"""Flash attention (prefill/train) — online-softmax block attention.
+
+Beyond-paper kernel: the transformer serving hot-spot analogous to the
+paper's convolution shader.  Grid (B*H, S/bq, S/bk) with the KV axis
+innermost (sequential on TPU), carrying running max / denominator /
+accumulator in VMEM scratch — identical schedule to the pure-JAX
+``attention_chunked`` in repro.models.common, which is its oracle.
+Supports causal and sliding-window masks (the long_500k variant).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, bq, bk, nk, causal, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (bq, D)
+    k = k_ref[0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D)."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, "pad sequence to block multiple"
+    scale = 1.0 / math.sqrt(d)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    nk = sk // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                          causal=causal, window=window),
+        grid=(b * h, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, qi, ki, g=groups: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, qi, ki, g=groups: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,71 @@
+"""Int8-weight matmul with per-channel scales — roadmap item 2.
+
+"use lower resolution on floating point in order to increase performance
+and support larger models" [Gupta'15; Warden'15].  The kernel multiplies
+int8 tiles into an int32 accumulator (MXU-native on TPU) and applies the
+row/column dequantization scales once, in the epilogue — so the expensive
+inner loop never touches floats.  Paired with repro.core.quantize, this is
+what lets the model store ship 4x-smaller artifacts that run directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...].astype(jnp.int32), b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc * sa_ref[...].T * sb_ref[...]).astype(o_ref.dtype)
+
+
+def int8_matmul(a_q: jax.Array, b_q: jax.Array, a_scale: jax.Array,
+                b_scale: jax.Array, *, block_m: int = 256,
+                block_n: int = 256, block_k: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """(M,K)i8 @ (K,N)i8 -> (M,N)f32, scaled by a_scale (M,), b_scale (N,)."""
+    m, k = a_q.shape
+    _, n = b_q.shape
+    bm = min(block_m, _rup(m, 8))
+    bn = min(block_n, _rup(n, 128))
+    bk = min(block_k, _rup(k, 128))
+    mp, np_, kp = _rup(m, bm), _rup(n, bn), _rup(k, bk)
+    a_p = jnp.pad(a_q, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b_q, ((0, kp - k), (0, np_ - n)))
+    sa = jnp.pad(a_scale.astype(jnp.float32), (0, mp - m))[None]   # (1, M)
+    sb = jnp.pad(b_scale.astype(jnp.float32), (0, np_ - n))[None]  # (1, N)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_int8_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bm), lambda i, j, kk: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p, sa, sb)
+    return out[:m, :n]
+
+
+def _rup(x, mult):
+    return ((x + mult - 1) // mult) * mult

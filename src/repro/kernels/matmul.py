@@ -1,0 +1,105 @@
+"""Tiled MXU matmul with fused bias + activation epilogue.
+
+This is the TPU adaptation of the paper's convolution shader: Metal
+dispatches one thread per output pixel; on TPU the win is feeding the
+128x128 systolic MXU, so convolution becomes im2col + this block matmul
+(see repro.kernels.conv2d).  The fused epilogue realizes the paper's
+"rectifier layer" shader as a free VPU pass over the accumulator tile.
+
+Grid (M/bm, N/bn, K/bk); the K axis is the innermost (sequential on TPU)
+dimension, accumulating into a VMEM scratch tile in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _epilogue(acc, bias, activation):
+    if bias is not None:
+        acc = acc + bias
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    return acc
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int,
+                   activation: str, bias_ref=None):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        acc = acc_ref[...]
+        b = bias_ref[...] if bias_ref is not None else None
+        o_ref[...] = _epilogue(acc, b, activation).astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bias: Optional[jax.Array] = None,
+           activation: str = "none", block_m: int = 256, block_n: int = 256,
+           block_k: int = 512, interpret: bool = False,
+           out_dtype=None) -> jax.Array:
+    """a: (M, K) @ b: (K, N) with fused bias (N,) + activation.
+
+    Inputs are zero-padded up to block multiples (MXU alignment: the
+    defaults are multiples of the 128x128 systolic array and 8x128 VREG
+    tiles); padding contributes zeros to the accumulator, so results are
+    exact.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    bm, bn, bk = min(block_m, _rup(m, 8)), min(block_n, _rup(n, 128)), \
+        min(block_k, _rup(k, 128))
+    mp, np_, kp = _rup(m, bm), _rup(n, bn), _rup(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [a_p, b_p]
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(bias_p[None])
+        kernel = functools.partial(_bias_kernel, nk=nk, activation=activation)
+    else:
+        kernel = functools.partial(_matmul_kernel, nk=nk,
+                                   activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out[:m, :n]
+
+
+def _bias_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, activation):
+    _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, nk=nk,
+                   activation=activation, bias_ref=bias_ref)
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,111 @@
+"""Public jit'd wrappers for all Pallas kernels.
+
+On non-TPU backends (this container is CPU) every kernel runs in
+``interpret=True`` mode — the kernel body executes as traced jnp on CPU,
+which is how correctness is validated; on TPU the same calls compile to
+real Mosaic kernels.  Call sites can force either via ``interpret=``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (conv2d as _conv2d_mod, decode_attention as _da,
+                           elementwise as _ew, flash_attention as _fa,
+                           int8_matmul as _i8, matmul as _mm, pool as _pool,
+                           rwkv6_chunk as _rwkv, softmax as _sm)
+
+
+def _interpret(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"
+
+
+# thin wrappers (jit applied here so benchmarks measure steady-state)
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "activation",
+                                             "interpret"))
+def conv2d(x, w, b=None, *, stride=1, pad=0, activation="none",
+           interpret=None):
+    return _conv2d_mod.conv2d(x, w, b, stride=stride, pad=pad,
+                              activation=activation,
+                              interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret",
+                                             "block_m", "block_n", "block_k"))
+def matmul(a, b, bias=None, *, activation="none", interpret=None,
+           block_m=256, block_n=256, block_k=512):
+    return _mm.matmul(a, b, bias=bias, activation=activation,
+                      block_m=block_m, block_n=block_n, block_k=block_k,
+                      interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "kernel", "stride",
+                                             "pad", "interpret"))
+def pool2d(x, *, mode="max", kernel=2, stride=2, pad=0, interpret=None):
+    return _pool.pool2d(x, mode=mode, kernel=kernel, stride=stride, pad=pad,
+                        interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax(x, *, interpret=None):
+    return _sm.softmax(x, interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "interpret"))
+def elementwise(x, act="relu", *, interpret=None):
+    return _ew.elementwise(x, act, interpret=_interpret(interpret))
+
+
+def relu(x, *, interpret=None):
+    return elementwise(x, "relu", interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul(a_q, b_q, a_scale, b_scale, *, interpret=None):
+    return _i8.int8_matmul(a_q, b_q, a_scale, b_scale,
+                           interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
+                    block_k=256, interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                              "block_k", "interpret"))
+def flash_attention_trainable(q, k, v, *, causal=True, window=0,
+                              block_q=256, block_k=256, interpret=None):
+    """Differentiable flash attention with FUSED Pallas forward+backward
+    (custom VJP; saves only O and logsumexp, recomputes p in VMEM)."""
+    from repro.kernels import flash_attention_bwd as _fab
+    return _fab.flash_attention_trainable(
+        q, k, v, causal, window, block_q, block_k, _interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, valid_len, *, block_s=512, interpret=None):
+    return _da.decode_attention(q, k, v, valid_len, block_s=block_s,
+                                interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(r, k, v, w, u, *, chunk=16, interpret=None):
+    t = r.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    out, s = _rwkv.rwkv6_chunked(r, k, v, w, u, chunk=chunk,
+                                 interpret=_interpret(interpret))
+    return out[:, :t], s

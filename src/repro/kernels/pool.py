@@ -1,0 +1,84 @@
+"""Pooling kernel (max / avg) — the paper's pooling shader on TPU.
+
+Grid over (B*C)/bc plane blocks; each instance holds a block of padded
+input planes in VMEM and reduces the K*K shifted strided views on the VPU
+(K is a small compile-time constant, so the loop unrolls into K^2
+vectorized max/add ops — the TPU analogue of the per-pixel Metal loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, mode, kernel, stride, oh, ow, denom_ref=None):
+    x = x_ref[...]                                  # (bc, Hp, Wp)
+    acc = None
+    for di in range(kernel):
+        for dj in range(kernel):
+            v = x[:, di:di + (oh - 1) * stride + 1:stride,
+                  dj:dj + (ow - 1) * stride + 1:stride]
+            if acc is None:
+                acc = v
+            elif mode == "max":
+                acc = jnp.maximum(acc, v)
+            else:
+                acc = acc + v
+    if mode == "avg":
+        acc = acc * denom_ref[...]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pool2d(x: jax.Array, *, mode: str = "max", kernel: int = 2,
+           stride: int = 2, pad: int = 0, block_c: int = 8,
+           interpret: bool = False) -> jax.Array:
+    """x: (B, C, H, W) -> (B, C, OH, OW).  Count-excluding-pad avg (Caffe
+    semantics, matching pool2d_ref)."""
+    b, c, h, w = x.shape
+    fill = -jnp.inf if mode == "max" else 0.0
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)),
+                    constant_values=fill)
+    hp, wp = h + 2 * pad, w + 2 * pad
+    oh = (hp - kernel) // stride + 1
+    ow = (wp - kernel) // stride + 1
+    bc = b * c
+    bcb = min(block_c, bc)
+    pad_bc = (-bc) % bcb
+    xf = x.reshape(bc, hp, wp)
+    if pad_bc:
+        xf = jnp.pad(xf, ((0, pad_bc), (0, 0), (0, 0)),
+                     constant_values=fill if mode == "max" else 0.0)
+    args = [xf]
+    in_specs = [pl.BlockSpec((bcb, hp, wp), lambda i: (i, 0, 0))]
+    if mode == "avg":
+        # per-window valid-count reciprocal (excludes padding, Caffe-style)
+        ones = jnp.ones((1, h, w), jnp.float32)
+        ones = jnp.pad(ones, ((0, 0), (pad, pad), (pad, pad)))
+        cnt = sum(ones[:, di:di + (oh - 1) * stride + 1:stride,
+                       dj:dj + (ow - 1) * stride + 1:stride]
+                  for di in range(kernel) for dj in range(kernel))
+        args.append(1.0 / cnt)
+        in_specs.append(pl.BlockSpec((1, oh, ow), lambda i: (0, 0, 0)))
+        kern = functools.partial(_avg_kernel, mode=mode, kernel=kernel,
+                                 stride=stride, oh=oh, ow=ow)
+    else:
+        kern = functools.partial(_pool_kernel, mode=mode, kernel=kernel,
+                                 stride=stride, oh=oh, ow=ow)
+    out = pl.pallas_call(
+        kern,
+        grid=((bc + pad_bc) // bcb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bcb, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc + pad_bc, oh, ow), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:bc].reshape(b, c, oh, ow)
+
+
+def _avg_kernel(x_ref, denom_ref, o_ref, *, mode, kernel, stride, oh, ow):
+    _pool_kernel(x_ref, o_ref, mode=mode, kernel=kernel, stride=stride,
+                 oh=oh, ow=ow, denom_ref=denom_ref)

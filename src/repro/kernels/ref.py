@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` matches the corresponding wrapper in repro.kernels.ops
+bit-for-bit up to fp accumulation order; tests sweep shapes/dtypes and
+assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# conv/pool oracles live with the graph engine — re-export for tests
+from repro.core.graph import conv2d_ref, pool2d_ref  # noqa: F401
+
+
+def matmul_ref(a, b, *, bias=None, activation: str = "none"):
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    return out.astype(a.dtype)
+
+
+def softmax_ref(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def relu_ref(x):
+    return jax.nn.relu(x)
+
+
+def int8_matmul_ref(a_q, b_q, a_scale, b_scale):
+    """a_q: (M, K) int8; b_q: (K, N) int8; scales: (M,), (N,) fp32.
+
+    Dequantized result: (a_q * a_scale[:,None]) @ (b_q * b_scale[None,:]).
+    """
+    acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a_scale[:, None] * b_scale[None, :]
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q: (B, H, D); k, v: (B, S, KV, D); valid_len scalar int."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    valid = jnp.arange(s) < valid_len
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) — full-sequence attention."""
+    from repro.models.common import attention_full
+    return attention_full(q, k, v, causal=causal, window=window)
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """Token-by-token RWKV6 recurrence (B, T, H, N)."""
+    from repro.models.rwkv6 import wkv_scan
+    return wkv_scan(r, k, v, w, u, s0=s0)

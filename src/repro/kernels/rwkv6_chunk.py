@@ -1,0 +1,94 @@
+"""Chunked RWKV-6 WKV kernel — recurrent scan restructured for the MXU.
+
+Roadmap item 4 ("support recurrent networks") meets the TPU: the
+token-by-token recurrence is hostile to systolic hardware, so the kernel
+processes CHUNK-token blocks where the intra-chunk contribution is a small
+batched matmul against materialized pairwise decay factors (all exponents
+<= 0, so numerically safe) and the inter-chunk state (N, N) is carried in
+VMEM scratch across the sequential chunk grid axis.
+
+Oracle: repro.models.rwkv6.wkv_scan (exact token recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 16
+NEG_BIG = -60.0
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
+                s_ref, *, nc, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)          # (C, N)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                # (N,)
+
+    lw = jnp.log(jnp.clip(w, 1e-26, 1.0))
+    cum = jnp.cumsum(lw, axis=0)                    # (C, N)
+    qdec = jnp.exp(cum - lw)
+    cum_last = cum[-1:]                             # (1, N)
+    kdec = k * jnp.exp(cum_last - cum)
+    diff = (cum - lw)[:, None, :] - cum[None, :, :]  # (C, C, N)
+    fac = jnp.exp(jnp.clip(diff, NEG_BIG, 0.0))
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lower = (ii > jj).astype(jnp.float32)
+    att = jnp.einsum("in,jn,ijn->ij", r, k, fac) * lower
+    out = jnp.dot(att, v, preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * k * u[None, :], axis=-1, keepdims=True)
+    out = out + bonus * v
+    s = s_ref[...]                                  # (N, N)
+    out = out + jnp.dot(r * qdec, s, preferred_element_type=jnp.float32)
+    s_ref[...] = s * jnp.exp(cum_last[0])[:, None] + jnp.dot(
+        kdec.T, v, preferred_element_type=jnp.float32)
+    o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        s_out_ref[0, 0] = s_ref[...].astype(s_out_ref.dtype)
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = CHUNK,
+                  interpret: bool = False):
+    """r,k,v,w: (B, T, H, N); u: (H, N) -> (out (B,T,H,N), state (B,H,N,N)).
+
+    T must be a multiple of ``chunk`` (ops.py pads).
+    """
+    b, t, h, n = r.shape
+    assert t % chunk == 0
+    nc = t // chunk
+    out, s = pl.pallas_call(
+        functools.partial(_wkv_kernel, nc=nc, chunk=chunk),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, n), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, n), r.dtype),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out, s

@@ -1,0 +1,42 @@
+"""Numerically-stable row softmax — the paper's softmax shader on TPU.
+
+Grid over row blocks; each instance normalizes a (block_rows, N) tile in
+VMEM (max-subtract, exp, renormalize — all VPU lane-parallel).  Columns are
+padded to the 128-lane boundary with -inf so padding never contributes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x: jax.Array, *, block_rows: int = 256,
+            interpret: bool = False) -> jax.Array:
+    """Softmax over the last axis of a 2D array (R, N)."""
+    r, n = x.shape
+    br = min(block_rows, max(8, r))
+    rp = ((r + br - 1) // br) * br
+    npad = (-n) % 128
+    xp = jnp.pad(x, ((0, rp - r), (0, npad)), constant_values=-jnp.inf)
+    # fully -inf padded rows would produce nan; make them finite
+    if rp > r:
+        xp = xp.at[r:, 0].set(0.0)
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, n + npad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n + npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, n + npad), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:r, :n]

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: 256 TPU v5e chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16) — the ``pod``
+axis carries pure data parallelism across the DCN/ICI boundary.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default 256-chip pod is (data=16, model=16); §Perf overrides may
+    re-factor the same chips (e.g. (32, 8) when an arch's head/expert
+    counts don't divide 16)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    elif multi_pod and len(shape) == 2:
+        shape = (2, *shape)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(repro.launch.dryrun does this) or on real hardware")
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (CPU smoke tests)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

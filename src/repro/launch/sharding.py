@@ -1,0 +1,132 @@
+"""Sharding rule sets: logical axis names -> mesh axes, per workload kind.
+
+The models annotate parameters (via P templates) and activations (via
+``hint``) with logical names; these tables decide placement.  The divisor
+check in ``sharding_hints.logical_to_spec`` silently drops any mapping
+that does not divide the dimension (e.g. granite's 40-expert bank on a
+16-way model axis falls back to per-expert FFN sharding).
+
+The §Perf hillclimb works by overriding entries here per (arch, shape) —
+see PERF_OVERRIDES at the bottom.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding_hints import logical_to_spec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def rules_for(kind: str, *, multi_pod: bool = False,
+              overrides: Optional[Dict[str, MeshAxes]] = None
+              ) -> Dict[str, MeshAxes]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, MeshAxes] = {
+        # --- activations ---
+        "batch": batch,
+        "seq": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "embed": None,
+        "vocab_act": "model",
+        "experts_act": "model",
+        "cache_seq": None,
+        # --- parameters ---
+        "tp_heads": "model",
+        "tp_kv": "model",
+        "tp_ff": "model",
+        "tp_vocab": "model",
+        "experts": "model",
+        "fsdp": "data",
+    }
+    if kind == "train":
+        pass                      # FSDP + TP is the training baseline
+    elif kind == "prefill":
+        pass                      # same layout; batch over data
+    elif kind == "decode":
+        # decode: the KV cache is the big tensor — shard its sequence dim
+        # over the model axis (head-count agnostic; works for kv=1..16);
+        # tp_kv stays for the (flattened) projection weights.
+        rules["cache_seq"] = "model"
+    else:
+        raise ValueError(kind)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def param_shardings(template, rules, mesh: Mesh):
+    """NamedSharding tree for a param template (P leaves)."""
+    from repro.models.common import P
+
+    def leaf(p: P):
+        spec = logical_to_spec(p.axes, rules, p.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(leaf, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def struct_shardings(structs, axes_tree, rules, mesh: Mesh):
+    """NamedSharding tree for ShapeDtypeStruct trees + logical axes trees."""
+    def leaf(s, axes):
+        spec = logical_to_spec(axes, rules, s.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(leaf, structs, axes_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb overrides — keyed by (arch, shape); populated during the
+# roofline iteration (EXPERIMENTS.md §Perf documents each entry's hypothesis
+# and measured effect).
+# ---------------------------------------------------------------------------
+
+PERF_OVERRIDES: Dict[Tuple[str, str], Dict[str, MeshAxes]] = {
+    # hillclimb 1: qwen3-moe x train_4k — baseline is collective-bound
+    # (2104 s!) because the dense GSPMD MoE's data-dependent scatter makes
+    # the compiler replicate the global token buffer.  The a2a impl
+    # dispatches locally per shard and moves only the intrinsic k*T*d
+    # bytes over an explicit all-to-all (see EXPERIMENTS.md §Perf).
+    ("qwen3-moe-235b-a22b", "train_4k"): {"moe_impl": "a2a", "tp_ff": None,
+                                          "attn_ckpt": True},
+    ("qwen3-moe-235b-a22b", "prefill_32k"): {"moe_impl": "a2a",
+                                             "tp_ff": None},
+    # hillclimb 2: granite-moe x prefill_32k — 40 experts don't divide the
+    # 16-way model axis, so the expert dim replicates and every buffer is
+    # full-size.  The local impl shards tokens over every axis and runs
+    # the (tiny, d_ff=512) experts replicated: dispatch collectives vanish.
+    # it2 (REFUTED, see §Perf): seq->model context parallelism made the
+    # memory term 7x WORSE — k/v carry the same logical seq axis, so every
+    # kv-chunk iteration re-gathers.  Reverted.
+    # it3: granite's real mismatch is structural — 24 heads / 40 experts
+    # vs a 16-way model axis.  Re-factor the SAME 256 chips as
+    # (data=32, model=8): 24 % 8 == 0 (attention shards), 40 % 8 == 0
+    # (true expert parallelism via the a2a impl).
+    ("granite-moe-3b-a800m", "prefill_32k"): {"moe_impl": "a2a",
+                                              "tp_ff": None,
+                                              "_mesh_shape": (32, 8)},
+    ("granite-moe-3b-a800m", "train_4k"): {"moe_impl": "local",
+                                           "experts": None, "tp_ff": None},
+    # carry-over of the hillclimb-2 finding: rwkv6 has 40 wkv heads
+    # (2560/64) — same 40-vs-16 mismatch as granite, same mesh fix.
+    # Confirmed for train_4k (collective 17.0 -> 8.2 s); REFUTED for
+    # prefill_32k (12.8 -> 18.9 s: batch 32 over data=32 leaves one
+    # sequence per device and the state all-reduce grows) — not applied.
+    ("rwkv6-3b", "train_4k"): {"_mesh_shape": (32, 8)},
+}
+
+
+def rules_for_pair(arch: str, shape: str, kind: str, *,
+                   multi_pod: bool = False, optimized: bool = False
+                   ) -> Dict[str, MeshAxes]:
+    ov = PERF_OVERRIDES.get((arch, shape)) if optimized else None
+    return rules_for(kind, multi_pod=multi_pod, overrides=ov)

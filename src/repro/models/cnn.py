@@ -1,0 +1,46 @@
+"""CNN family (NIN / LeNet) — the paper's own models, via the core graph.
+
+These run through the exact pipeline the paper describes: a layer-graph
+spec (the Caffe->JSON interchange) executed by repro.core.graph with the
+Metal-shader-equivalent operator set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.graph import Graph
+
+
+def graph_for(cfg: ArchConfig) -> Graph:
+    if cfg.name == "nin-cifar10":
+        from repro.configs.nin_cifar10 import NIN_CIFAR10_SPEC as spec
+    elif cfg.name == "lenet-mnist":
+        from repro.configs.lenet_mnist import LENET_MNIST_SPEC as spec
+    else:
+        raise KeyError(cfg.name)
+    return Graph.from_spec(spec)
+
+
+def param_template(cfg: ArchConfig):
+    # CNN params come from Graph.init_params (data-dependent shapes);
+    # provide a template-compatible entry point for uniformity.
+    raise NotImplementedError(
+        "CNN models initialize via Graph.init_params (see repro.core.graph)")
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    return graph_for(cfg).init_params(key)
+
+
+def forward(cfg: ArchConfig, params, images, **kw):
+    return graph_for(cfg).apply(params, images, **kw)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, **kw):
+    probs = forward(cfg, params, batch["images"])
+    logp = jnp.log(jnp.clip(probs, 1e-9, 1.0))
+    labels = batch["labels"]
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return nll, {"loss": nll}

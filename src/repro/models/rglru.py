@@ -1,0 +1,310 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA.
+
+[arXiv:2402.19427]  Layer i is local attention iff i % attn_period ==
+attn_period - 1 (1 attention per 2 recurrences for RecurrentGemma), else a
+gated-linear-recurrence block:
+
+    branch A: GeLU(W_a x)
+    branch B: RG-LRU(conv1d_4(W_b x))
+    out      = W_o (A * B)
+
+RG-LRU:  a_t = exp(c * r_t * log sigmoid(L));  r_t, i_t input-sigmoid gates
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (the recurrence
+is elementwise-affine, so it parallelizes with log depth); decode is the
+one-step recurrence with O(1) state + a ring conv buffer + window-sized KV
+caches for the attention layers.  Layers are unrolled (heterogeneous
+pattern), parameters per kind are stacked.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import P
+from repro.sharding_hints import hint
+
+LRU_C = 8.0
+
+
+def layer_kinds(cfg: ArchConfig):
+    """List of 'rec' | 'attn' per layer."""
+    p = cfg.attn_period
+    return ["attn" if (i % p == p - 1) else "rec"
+            for i in range(cfg.num_layers)]
+
+
+def _counts(cfg):
+    kinds = layer_kinds(cfg)
+    return kinds.count("rec"), kinds.count("attn")
+
+
+def param_template(cfg: ArchConfig):
+    L, d, f = cfg.num_layers, cfg.d_model, cfg.d_ff
+    w = cfg.lru_width or d
+    n_rec, n_attn = _counts(cfg)
+    cw = cfg.conv_width
+    return {
+        "embed": P((cfg.vocab_size, d), ("tp_vocab", "fsdp"), "embed"),
+        "final_ln": P((d,), (None,), "zeros"),
+        "unembed": P((d, cfg.vocab_size), ("fsdp", "tp_vocab")),
+        "rec": {
+            "ln1": P((n_rec, d), (None, None), "zeros"),
+            "w_a": P((n_rec, d, w), (None, "fsdp", "tp_ff")),
+            "w_b": P((n_rec, d, w), (None, "fsdp", "tp_ff")),
+            "conv_w": P((n_rec, cw, w), (None, None, "tp_ff")),
+            "conv_b": P((n_rec, w), (None, "tp_ff"), "zeros"),
+            "gate_a_w": P((n_rec, w, w), (None, "tp_ff", None)),
+            "gate_a_b": P((n_rec, w), (None, "tp_ff"), "zeros"),
+            "gate_x_w": P((n_rec, w, w), (None, "tp_ff", None)),
+            "gate_x_b": P((n_rec, w), (None, "tp_ff"), "zeros"),
+            "lam": P((n_rec, w), (None, "tp_ff"), "ones"),
+            "w_out": P((n_rec, w, d), (None, "tp_ff", "fsdp")),
+        },
+        "attn": tfm._attn_template(cfg, n_attn),
+        "mlp": tfm._mlp_template(cfg, L),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _log_a(lp, x):
+    """x: (..., w) pre-activation input; returns (log_a, input_gate)."""
+    r = jax.nn.sigmoid(x @ lp["gate_a_w"] + lp["gate_a_b"])
+    i = jax.nn.sigmoid(x @ lp["gate_x_w"] + lp["gate_x_b"])
+    log_a = LRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(
+        lp["lam"].astype(jnp.float32))
+    return log_a, i
+
+
+def rg_lru(lp, x, h0=None):
+    """x: (B, T, w).  Returns (y (B,T,w), h_last (B,w) fp32)."""
+    log_a, gate_i = _log_a(lp, x)
+    a = jnp.exp(log_a)                                   # (B,T,w) in (0,1)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, 1.0)) * \
+        (gate_i.astype(jnp.float32) * x.astype(jnp.float32))
+    if h0 is not None:
+        # fold the incoming state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], 1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, h = lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(lp, x, h):
+    """x: (B, w); h: (B, w) fp32."""
+    log_a, gate_i = _log_a(lp, x)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, 1.0)) * \
+        (gate_i.astype(jnp.float32) * x.astype(jnp.float32))
+    h_new = a * h + gated
+    return h_new.astype(x.dtype), h_new
+
+
+def causal_conv(lp, x, state=None):
+    """Depthwise causal conv, width cw. x: (B,T,w); state: (B,cw-1,w)."""
+    cw = lp["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * lp["conv_w"][i]
+            for i in range(cw)) + lp["conv_b"]
+    return y, xp[:, -(cw - 1):]
+
+
+def causal_conv_step(lp, x, state):
+    """x: (B, w); state: (B, cw-1, w) holds the previous cw-1 inputs."""
+    cw = lp["conv_w"].shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x[:, None]], axis=1)
+    y = sum(xp[:, i] * lp["conv_w"][i] for i in range(cw)) + lp["conv_b"]
+    return y, xp[:, 1:]
+
+
+def rec_block(cfg, lp, x, conv_state=None, h_state=None):
+    """Full Griffin recurrent block. x: (B,T,d)."""
+    xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a = jax.nn.gelu(hint(xn @ lp["w_a"], "batch", "seq", "ff"))
+    bpre = hint(xn @ lp["w_b"], "batch", "seq", "ff")
+    bconv, conv_state = causal_conv(lp, bpre, conv_state)
+    b, h_state = rg_lru(lp, bconv, h_state)
+    return hint((a * b) @ lp["w_out"], "batch", "seq", "embed"), \
+        conv_state, h_state
+
+
+def rec_block_step(cfg, lp, x, conv_state, h_state):
+    """x: (B, d) one token."""
+    xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a = jax.nn.gelu(xn @ lp["w_a"])
+    bpre = xn @ lp["w_b"]
+    bconv, conv_state = causal_conv_step(lp, bpre, conv_state)
+    b, h_state = rg_lru_step(lp, bconv, h_state)
+    return (a * b) @ lp["w_out"], conv_state, h_state
+
+
+# ---------------------------------------------------------------------------
+# Model API (layers unrolled; params indexed per kind)
+# ---------------------------------------------------------------------------
+
+
+def _slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, window: int = 0,
+            remat: bool = True):
+    del window  # local attention window comes from the config
+    x = params["embed"][tokens]
+    x = hint(x, "batch", "seq", "embed")
+    kinds = layer_kinds(cfg)
+    ri = ai = 0
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            lp = _slice(params["rec"], ri)
+            ri += 1
+            fn = lambda x, lp=lp: rec_block(cfg, lp, x)[0]
+        else:
+            lp = _slice(params["attn"], ai)
+            ai += 1
+            fn = lambda x, lp=lp: tfm.attn(
+                cfg, lp, x, window=cfg.local_window)[0]
+        if remat:
+            fn = jax.checkpoint(fn)
+        x = x + fn(x)
+        mp = _slice(params["mlp"], li)
+        mfn = (jax.checkpoint(lambda x, mp=mp: tfm.mlp(cfg, mp, x))
+               if remat else (lambda x, mp=mp: tfm.mlp(cfg, mp, x)))
+        x = x + mfn(x)
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return hint(x @ params["unembed"], "batch", "seq", "vocab_act")
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
+    logits = forward(cfg, params, batch["tokens"])
+    loss = cm.softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    n_rec, n_attn = _counts(cfg)
+    w = cfg.lru_width or cfg.d_model
+    wlen = min(cache_len, cfg.local_window)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "h": jnp.zeros((n_rec, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dtype),
+        "k": jnp.zeros((n_attn, batch, kv, wlen, hd), dtype),
+        "v": jnp.zeros((n_attn, batch, kv, wlen, hd), dtype),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    n_rec, n_attn = _counts(cfg)
+    w = cfg.lru_width or cfg.d_model
+    wlen = min(cache_len, cfg.local_window)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return ({
+        "h": jax.ShapeDtypeStruct((n_rec, batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (n_rec, batch, cfg.conv_width - 1, w), dtype),
+        "k": jax.ShapeDtypeStruct((n_attn, batch, kv, wlen, hd), dtype),
+        "v": jax.ShapeDtypeStruct((n_attn, batch, kv, wlen, hd), dtype),
+    }, {
+        "h": (None, "batch", "ff"),
+        "conv": (None, "batch", None, "ff"),
+        "k": (None, "batch", "tp_kv", "cache_seq", None),
+        "v": (None, "batch", "tp_kv", "cache_seq", None),
+    })
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
+                window: int = 0):
+    del window
+    x = params["embed"][token[:, 0]]
+    kinds = layer_kinds(cfg)
+    hs, convs, ks, vs = [], [], [], []
+    ri = ai = 0
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            lp = _slice(params["rec"], ri)
+            a, cst, hst = rec_block_step(
+                cfg, lp, x, cache["conv"][ri], cache["h"][ri])
+            convs.append(cst)
+            hs.append(hst)
+            ri += 1
+            x = x + a
+        else:
+            lp = _slice(params["attn"], ai)
+            a, ck, cv = tfm.attn_decode(
+                cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai], pos,
+                window=cfg.local_window)
+            ks.append(ck)
+            vs.append(cv)
+            ai += 1
+            x = x + a[:, 0]
+        x = x + tfm.mlp(cfg, _slice(params["mlp"], li), x[:, None])[:, 0]
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["unembed"])[:, None]
+    new_cache = {
+        "h": jnp.stack(hs), "conv": jnp.stack(convs),
+        "k": jnp.stack(ks), "v": jnp.stack(vs),
+    }
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
+            window: int = 0, cache_dtype=jnp.bfloat16):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    kinds = layer_kinds(cfg)
+    wlen = min(cache_len, cfg.local_window)
+    hs, convs, ks, vs = [], [], [], []
+    ri = ai = 0
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            lp = _slice(params["rec"], ri)
+            a, cst, hst = rec_block(cfg, lp, x)
+            convs.append(cst.astype(cache_dtype))
+            hs.append(hst)
+            ri += 1
+            x = x + a
+        else:
+            lp = _slice(params["attn"], ai)
+            a, (kk, vv) = tfm.attn(cfg, lp, x, window=cfg.local_window)
+            keep = min(s, wlen)
+            pad = wlen - keep
+            kk = jnp.pad(kk[:, s - keep:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(vv[:, s - keep:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if s > wlen:
+                kk = jnp.roll(kk, s % wlen, axis=1)
+                vv = jnp.roll(vv, s % wlen, axis=1)
+            # bksd cache layout (B, KV, S, D) — see tfm.attn_decode
+            ks.append(kk.astype(cache_dtype).transpose(0, 2, 1, 3))
+            vs.append(vv.astype(cache_dtype).transpose(0, 2, 1, 3))
+            ai += 1
+            x = x + a
+        x = x + tfm.mlp(cfg, _slice(params["mlp"], li), x)
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    cache = {"h": jnp.stack(hs), "conv": jnp.stack(convs),
+             "k": jnp.stack(ks), "v": jnp.stack(vs)}
+    return logits, cache

@@ -1,0 +1,342 @@
+"""RWKV-6 "Finch" — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892]  Matrix-valued per-head state S in R^{N x N}:
+
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+with token-shift "ddlerp" low-rank mixing producing r/k/v/w/g per token and
+the decay w_t itself data-dependent (the Finch novelty vs Eagle).
+
+Training/prefill uses an exact *chunked* scan: within a chunk of 16 tokens
+the pairwise decay factors exp(cum_{i-1} - cum_j) (always <= 1, so stable in
+log space) are materialized and contracted on the MXU; the inter-chunk state
+is carried by ``lax.scan``.  Decode is the O(1) recurrence.  The Pallas TPU
+kernel in repro.kernels.rwkv6_chunk implements the same chunk schedule
+on-chip; this file is the jnp reference used for lowering and the oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.common import P
+from repro.sharding_hints import hint
+
+MIX_LORA = 32     # rank of the ddlerp mixing lora (5 targets: w,k,v,r,g)
+DECAY_LORA = 64   # rank of the decay lora
+CHUNK = 16        # intra-chunk length for the parallel scan
+
+
+def param_template(cfg: ArchConfig):
+    L, d, f = cfg.num_layers, cfg.d_model, cfg.d_ff
+    H = cfg.d_model // cfg.rwkv_head_dim
+    N = cfg.rwkv_head_dim
+    return {
+        "embed": P((cfg.vocab_size, d), ("tp_vocab", "fsdp"), "embed"),
+        "final_ln": P((d,), (None,), "zeros"),
+        "unembed": P((d, cfg.vocab_size), ("fsdp", "tp_vocab")),
+        "layers": {
+            "ln1": P((L, d), (None, None), "zeros"),
+            "ln2": P((L, d), (None, None), "zeros"),
+            # --- time mix (ddlerp) ---
+            "maa_x": P((L, d), (None, None), "zeros"),
+            "maa_base": P((L, 5, d), (None, None, None), "zeros"),
+            "maa_w1": P((L, d, 5 * MIX_LORA), (None, "fsdp", None)),
+            "maa_w2": P((L, 5, MIX_LORA, d), (None, None, None, "fsdp")),
+            "decay_base": P((L, d), (None, None), "zeros"),
+            "decay_w1": P((L, d, DECAY_LORA), (None, "fsdp", None)),
+            "decay_w2": P((L, DECAY_LORA, d), (None, None, "fsdp")),
+            "bonus": P((L, H, N), (None, "tp_heads", None)),
+            "wr": P((L, d, d), (None, "fsdp", "tp_heads")),
+            "wk": P((L, d, d), (None, "fsdp", "tp_heads")),
+            "wv": P((L, d, d), (None, "fsdp", "tp_heads")),
+            "wg": P((L, d, d), (None, "fsdp", "tp_heads")),
+            "wo": P((L, d, d), (None, "tp_heads", "fsdp")),
+            "gn_w": P((L, d), (None, None), "ones"),
+            "gn_b": P((L, d), (None, None), "zeros"),
+            # --- channel mix ---
+            "cm_maa_k": P((L, d), (None, None), "zeros"),
+            "cm_maa_r": P((L, d), (None, None), "zeros"),
+            "cm_wk": P((L, d, f), (None, "fsdp", "tp_ff")),
+            "cm_wv": P((L, f, d), (None, "tp_ff", "fsdp")),
+            "cm_wr": P((L, d, d), (None, "fsdp", "tp_heads")),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV scans
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = CHUNK):
+    """Exact chunked RWKV6 linear attention.
+
+    r,k,v,w: (B, T, H, N) with w in (0,1); u: (H, N).
+    Returns out (B, T, H, N) and final state (B, H, N, N).
+    """
+    b, t, h, n = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    tt = t + pad
+    nc = tt // chunk
+    rs = lambda x: jnp.moveaxis(
+        x.reshape(b, nc, chunk, h, n), 1, 0)          # (nc,B,C,H,N)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(w)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    neg_big = -60.0
+
+    def body(s, xs):
+        rr, kk, vv, ww = [x.astype(jnp.float32) for x in xs]
+        lw = jnp.log(jnp.clip(ww, 1e-26, 1.0))        # (B,C,H,N) <= 0
+        cum = jnp.cumsum(lw, axis=1)
+        qdec = jnp.exp(cum - lw)                      # decay before token i
+        cum_last = cum[:, -1:]                        # (B,1,H,N)
+        kdec = kk * jnp.exp(cum_last - cum)           # decay to chunk end
+        # intra-chunk pairwise decays: (B,C,C,H,N), always <= 1
+        diff = (cum - lw)[:, :, None] - cum[:, None, :]
+        # causal (j < i) entries are always <= 0; clip kills the inf that
+        # exp() would produce on the masked upper triangle
+        fac = jnp.exp(jnp.clip(diff, neg_big, 0.0))
+        ii = jnp.arange(chunk)
+        lower = (ii[:, None] > ii[None, :])           # strictly causal
+        fac = fac * lower[None, :, :, None, None]
+        att = jnp.einsum("bihn,bjhn,bijhn->bhij", rr, kk, fac)
+        out = jnp.einsum("bhij,bjhn->bihn", att, vv)
+        # current-token bonus
+        bt = jnp.einsum("bihn,bihn,hn->bih", rr, kk, u.astype(jnp.float32))
+        out = out + bt[..., None] * vv
+        # inter-chunk: incoming state
+        out = out + jnp.einsum("bihn,bhnm->bihm", rr * qdec, s)
+        # state update
+        s_new = s * jnp.exp(cum_last[:, 0])[..., None] + \
+            jnp.einsum("bjhn,bjhm->bhnm", kdec, vv)
+        return s_new, out
+
+    s_final, outs = lax.scan(body, s0, (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tt, h, n)[:, :t]
+    return out.astype(r.dtype), s_final
+
+
+def wkv_step(r, k, v, w, u, s):
+    """One-token recurrence. r,k,v,w: (B, H, N); s: (B, H, N, N) fp32."""
+    r, k, v, w = [x.astype(jnp.float32) for x in (r, k, v, w)]
+    kv = k[..., :, None] * v[..., None, :]            # (B,H,N,N)
+    out = jnp.einsum("bhn,bhnm->bhm", r, s + u[..., None] * kv)
+    s_new = s * w[..., None] + kv
+    return out, s_new
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Token-by-token reference (oracle for wkv_chunked)."""
+    b, t, h, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def body(s, xs):
+        rr, kk, vv, ww = xs
+        out, s = wkv_step(rr, kk, vv, ww, u, s)
+        return s, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    s, outs = lax.scan(body, s0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(lp, x, sx):
+    """Data-dependent token-shift mixing -> (xw, xk, xv, xr, xg)."""
+    xxx = x + sx * lp["maa_x"]
+    m = jnp.tanh(xxx @ lp["maa_w1"])
+    m = m.reshape(*x.shape[:-1], 5, MIX_LORA)
+    off = jnp.einsum("...fr,frd->...fd", m, lp["maa_w2"])
+    mix = lp["maa_base"] + off                         # (...,5,d)
+    xs = x[..., None, :] + sx[..., None, :] * mix
+    return tuple(xs[..., i, :] for i in range(5))
+
+
+def _decay(cfg, lp, xw):
+    inner = lp["decay_base"] + jnp.tanh(xw @ lp["decay_w1"]) @ lp["decay_w2"]
+    return jnp.exp(-jnp.exp(jnp.clip(inner.astype(jnp.float32), -20., 5.)))
+
+
+def _heads(cfg, x):
+    b = x.shape[:-1]
+    return x.reshape(*b, x.shape[-1] // cfg.rwkv_head_dim, cfg.rwkv_head_dim)
+
+
+def _group_norm(x, w, b, eps=1e-5):
+    # x: (..., H, N) — normalize per head
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    sh = x.shape[-2:]
+    return (y * w.reshape(sh) + b.reshape(sh)).astype(x.dtype)
+
+
+def time_mix(cfg: ArchConfig, lp, x, shift_state=None, wkv_state=None,
+             use_chunked=True):
+    """x: (B, T, d).  shift_state: (B, d) last token of previous segment."""
+    b, t, d = x.shape
+    prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None \
+        else shift_state[:, None].astype(x.dtype)
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xw, xk, xv, xr, xg = _ddlerp(lp, x, sx)
+    r = hint(_heads(cfg, xr @ lp["wr"]), "batch", "seq", "heads", None)
+    k = _heads(cfg, xk @ lp["wk"])
+    v = _heads(cfg, xv @ lp["wv"])
+    g = jax.nn.silu(xg @ lp["wg"])
+    w = _heads(cfg, _decay(cfg, lp, xw))
+    u = _heads(cfg, lp["bonus"].reshape(-1))
+    fn = wkv_chunked if use_chunked else wkv_scan
+    out, s = fn(r, k, v, w, u, s0=wkv_state)
+    out = _group_norm(out, lp["gn_w"], lp["gn_b"]).reshape(b, t, d)
+    return (out * g) @ lp["wo"], x[:, -1], s
+
+
+def time_mix_step(cfg: ArchConfig, lp, x, shift_state, wkv_state):
+    """x: (B, d) one token."""
+    sx = shift_state.astype(x.dtype) - x
+    xw, xk, xv, xr, xg = _ddlerp(lp, x, sx)
+    r = _heads(cfg, xr @ lp["wr"])
+    k = _heads(cfg, xk @ lp["wk"])
+    v = _heads(cfg, xv @ lp["wv"])
+    g = jax.nn.silu(xg @ lp["wg"])
+    w = _heads(cfg, _decay(cfg, lp, xw))
+    u = _heads(cfg, lp["bonus"].reshape(-1))
+    out, s = wkv_step(r, k, v, w, u, wkv_state)
+    out = _group_norm(out, lp["gn_w"], lp["gn_b"]).reshape(x.shape)
+    return (out.astype(x.dtype) * g) @ lp["wo"], x, s
+
+
+def channel_mix(cfg: ArchConfig, lp, x, shift_state=None):
+    b = x.shape[0]
+    if x.ndim == 3:
+        prev = jnp.zeros((b, 1, x.shape[-1]), x.dtype) if shift_state is None \
+            else shift_state[:, None].astype(x.dtype)
+        x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+        new_shift = x[:, -1]
+    else:
+        x_prev = shift_state.astype(x.dtype)
+        new_shift = x
+    sx = x_prev - x
+    xk = x + sx * lp["cm_maa_k"]
+    xr = x + sx * lp["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(hint(xk @ lp["cm_wk"], "batch", "seq", "ff")))
+    return jax.nn.sigmoid(xr @ lp["cm_wr"]) * (k @ lp["cm_wv"]), new_shift
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, tokens, *, window: int = 0,
+            remat: bool = True):
+    del window  # attention-free
+    x = params["embed"][tokens]
+    x = hint(x, "batch", "seq", "embed")
+
+    def layer(x, lp):
+        a, _, _ = time_mix(cfg, lp, cm.rms_norm(x, lp["ln1"], cfg.norm_eps))
+        x = x + a
+        c, _ = channel_mix(cfg, lp, cm.rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x + c, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = lax.scan(body, x, params["layers"])
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return hint(x @ params["unembed"], "batch", "seq", "vocab_act")
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
+    logits = forward(cfg, params, batch["tokens"])
+    loss = cm.softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    del cache_len  # O(1) state — the paper's roadmap item 4, realized
+    L, d = cfg.num_layers, cfg.d_model
+    H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((L, batch, H, N, N), jnp.float32),
+        "shift_tm": jnp.zeros((L, batch, d), dtype),
+        "shift_cm": jnp.zeros((L, batch, d), dtype),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    L, d = cfg.num_layers, cfg.d_model
+    H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return ({
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, N, N), jnp.float32),
+        "shift_tm": jax.ShapeDtypeStruct((L, batch, d), dtype),
+        "shift_cm": jax.ShapeDtypeStruct((L, batch, d), dtype),
+    }, {
+        "wkv": (None, "batch", "heads", None, None),
+        "shift_tm": (None, "batch", None),
+        "shift_cm": (None, "batch", None),
+    })
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
+                window: int = 0):
+    del pos, window
+    x = params["embed"][token[:, 0]]                  # (B, d)
+
+    def layer(x, scanned):
+        lp, wkv, stm, scm = scanned
+        a, stm, wkv = time_mix_step(
+            cfg, lp, cm.rms_norm(x, lp["ln1"], cfg.norm_eps), stm, wkv)
+        x = x + a
+        c, scm = channel_mix(
+            cfg, lp, cm.rms_norm(x, lp["ln2"], cfg.norm_eps), scm)
+        return x + c, (wkv, stm, scm)
+
+    x, (wkv, stm, scm) = lax.scan(
+        layer, x, (params["layers"], cache["wkv"], cache["shift_tm"],
+                   cache["shift_cm"]))
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["unembed"])[:, None]
+    return logits, {"wkv": wkv, "shift_tm": stm.astype(cache["shift_tm"].dtype),
+                    "shift_cm": scm.astype(cache["shift_cm"].dtype)}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
+            window: int = 0, cache_dtype=jnp.bfloat16):
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+
+    def layer(x, lp):
+        a, stm, wkv = time_mix(cfg, lp,
+                               cm.rms_norm(x, lp["ln1"], cfg.norm_eps))
+        x = x + a
+        c, scm = channel_mix(cfg, lp,
+                             cm.rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x + c, (wkv, stm.astype(cache_dtype), scm.astype(cache_dtype))
+
+    x, (wkv, stm, scm) = lax.scan(layer, x, params["layers"])
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, {"wkv": wkv, "shift_tm": stm, "shift_cm": scm}

@@ -1,0 +1,239 @@
+"""Dense decoder-only transformer (llama/qwen/tinyllama/chameleon families).
+
+Stacked-layer parameters + ``lax.scan`` over layers keep the HLO compact
+(one layer body regardless of depth) — this is what makes the 48-layer
+34B dry-run compile quickly.  The VLM family (chameleon) is this model:
+early fusion means image VQ codes are ordinary ids in the shared vocab.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.common import P
+from repro.sharding_hints import hint
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+
+def _attn_template(cfg: ArchConfig, L: int) -> Dict[str, P]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    t = {
+        "ln1": P((L, d), (None, None), "zeros"),
+        "wq": P((L, d, cfg.q_dim), (None, "fsdp", "tp_heads")),
+        "wk": P((L, d, cfg.kv_dim), (None, "fsdp", "tp_kv")),
+        "wv": P((L, d, cfg.kv_dim), (None, "fsdp", "tp_kv")),
+        "wo": P((L, cfg.q_dim, d), (None, "tp_heads", "fsdp")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = P((L, hd), (None, None), "zeros")
+        t["k_norm"] = P((L, hd), (None, None), "zeros")
+    return t
+
+
+def _mlp_template(cfg: ArchConfig, L: int) -> Dict[str, P]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln2": P((L, d), (None, None), "zeros"),
+        "w_gate": P((L, d, f), (None, "fsdp", "tp_ff")),
+        "w_up": P((L, d, f), (None, "fsdp", "tp_ff")),
+        "w_down": P((L, f, d), (None, "tp_ff", "fsdp")),
+    }
+
+
+def param_template(cfg: ArchConfig):
+    L = cfg.num_layers
+    t = {
+        "embed": P((cfg.vocab_size, cfg.d_model), ("tp_vocab", "fsdp"),
+                   "embed"),
+        "final_ln": P((cfg.d_model,), (None,), "zeros"),
+        "layers": {**_attn_template(cfg, L), **_mlp_template(cfg, L)},
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = P((cfg.d_model, cfg.vocab_size), ("fsdp", "tp_vocab"))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Layer pieces (shared with moe.py / encdec.py)
+# ---------------------------------------------------------------------------
+
+
+def attn(cfg: ArchConfig, lp, x, *, window: int = 0, q_offset: int = 0,
+         positions=None):
+    """Self-attention over a full sequence (train / prefill).
+
+    Returns (output, (k, v)) so callers can populate a KV cache.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (xn @ lp["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (xn @ lp["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = cm.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(s)[None, :] + q_offset
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    q = hint(q, "batch", "seq", "heads", None)
+    k = hint(k, "batch", "seq", "kv_heads", None)
+    from repro.sharding_hints import get_rule
+    out = cm.attention_chunked(q, k, v, causal=True, window=window,
+                               save_memory=bool(get_rule("attn_ckpt")))
+    out = out.reshape(b, s, cfg.q_dim)
+    return hint(out @ lp["wo"], "batch", "seq", "embed"), (k, v)
+
+
+def attn_decode(cfg: ArchConfig, lp, x, ck, cv, pos, *, window: int = 0):
+    """One-token attention against a ring cache.  x: (B, 1, d);
+    caches: (B, KV, S, D) — the batch-major 'bksd' layout keeps the two
+    decode dots transpose-free (§Perf hillclimb 3, iteration 3)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    cache_size = ck.shape[2]
+    xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    k = (xn @ lp["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = (xn @ lp["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = cm.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = cm.apply_rope(q, posv, cfg.rope_theta)
+    k = cm.apply_rope(k, posv, cfg.rope_theta)
+    # (B, 1, KV, D) -> (B, KV, 1, D) to write along the bksd seq axis
+    ck, cv = cm.cache_write(ck, cv, k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), pos, seq_axis=2)
+    valid = cm.cache_valid_len(pos, cache_size)
+    out = cm.attention_decode(q, ck, cv, valid, layout="bksd")
+    out = out.reshape(b, 1, cfg.q_dim)
+    return out @ lp["wo"], ck, cv
+
+
+def mlp(cfg: ArchConfig, lp, x):
+    xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return cm.swiglu(xn, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _logits(cfg: ArchConfig, params, x):
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["unembed"]
+    return hint((x @ w.astype(x.dtype)), "batch", "seq", "vocab_act")
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = params["embed"][tokens]
+    return hint(x, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Forward / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, tokens, *, window: int = 0,
+            remat: bool = True):
+    """tokens (B, S) -> logits (B, S, V)."""
+    x = _embed(cfg, params, tokens)
+
+    def layer(x, lp):
+        a, _ = attn(cfg, lp, x, window=window)
+        x = x + a
+        x = x + mlp(cfg, lp, x)
+        return x, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = lax.scan(body, x, params["layers"])
+    return _logits(cfg, params, x)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
+    logits = forward(cfg, params, batch["tokens"], window=window)
+    loss = cm.softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    """Decoder-only cache layout: (L, B, KV, S, D) ('bksd')."""
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, kv, cache_len, hd), dtype),
+        "v": jnp.zeros((L, batch, kv, cache_len, hd), dtype),
+    }
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    """ShapeDtypeStruct + logical axes for the dry-run."""
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (L, batch, kv, cache_len, hd)
+    axes = (None, "batch", "tp_kv", "cache_seq", None)
+    return ({"k": jax.ShapeDtypeStruct(shape, dtype),
+             "v": jax.ShapeDtypeStruct(shape, dtype)},
+            {"k": axes, "v": axes})
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
+                window: int = 0):
+    """token (B, 1) int32; pos scalar int32.  Returns (logits, cache).
+
+    The cache streams through the layer scan as xs/ys — XLA streams the
+    per-layer slices; carrying the whole buffer instead provokes
+    conservative full-cache copies (§Perf h3 it2, REFUTED, 3x worse).
+    """
+    x = _embed(cfg, params, token)
+
+    def layer(x, scanned):
+        lp, ck, cv = scanned
+        a, ck, cv = attn_decode(cfg, lp, x, ck, cv, pos, window=window)
+        x = x + a
+        x = x + mlp(cfg, lp, x)
+        return x, (ck, cv)
+
+    x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k"],
+                                      cache["v"]))
+    return _logits(cfg, params, x), {"k": ck, "v": cv}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache_len: int,
+            *, window: int = 0, cache_dtype=jnp.bfloat16):
+    """Run the full prompt, returning logits and a populated cache."""
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens)
+
+    def layer(x, lp):
+        a, (k, v) = attn(cfg, lp, x, window=window)
+        x = x + a
+        x = x + mlp(cfg, lp, x)
+        return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    x, (ks, vs) = lax.scan(layer, x, params["layers"])
+    cache = init_cache(cfg, b, cache_len, cache_dtype)
+    keep = min(s, cache_len)
+    # (L, B, S, KV, D) stacked attn outputs -> bksd (L, B, KV, S, D)
+    ks = ks.transpose(0, 1, 3, 2, 4)
+    vs = vs.transpose(0, 1, 3, 2, 4)
+    ck = lax.dynamic_update_slice_in_dim(
+        cache["k"], ks[:, :, :, s - keep:], 0, axis=3)
+    cv = lax.dynamic_update_slice_in_dim(
+        cache["v"], vs[:, :, :, s - keep:], 0, axis=3)
+    if s > cache_len:
+        # ring alignment: token t lives at slot t % cache_len
+        ck = jnp.roll(ck, s % cache_len, axis=3)
+        cv = jnp.roll(cv, s % cache_len, axis=3)
+    return _logits(cfg, params, x), {"k": ck, "v": cv}

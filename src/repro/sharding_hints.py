@@ -1,0 +1,104 @@
+"""Logical-axis sharding hints.
+
+Model code annotates activations with *logical* axis names via ``hint``;
+``repro.launch.sharding`` installs a rule set (logical name -> mesh axes)
+for the duration of a lowering.  Outside any rule context ``hint`` is an
+identity, so the models stay mesh-agnostic (smoke tests see one device).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    old_r, old_m = _rules(), _mesh()
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old_r, old_m
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, MeshAxes]] = None,
+                    shape: Optional[Sequence[int]] = None) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    If ``shape`` is given, any mapping that does not divide the dimension
+    evenly is dropped (falls back to replication on that dim) — this is how
+    e.g. a 40-expert bank stays replicated on a 16-way model axis.
+    """
+    rules = rules if rules is not None else (_rules() or {})
+    used = set()
+    out = []
+    for i, name in enumerate(axes):
+        target = rules.get(name) if name else None
+        if target is None:
+            out.append(None)
+            continue
+        tup = (target,) if isinstance(target, str) else tuple(target)
+        tup = tuple(t for t in tup if t not in used)
+        if not tup:
+            out.append(None)
+            continue
+        if shape is not None:
+            mesh = _mesh()
+            if mesh is not None:
+                size = 1
+                for t in tup:
+                    size *= mesh.shape[t]
+                if shape[i] % size != 0:
+                    out.append(None)
+                    continue
+        used.update(tup)
+        out.append(tup[0] if len(tup) == 1 else tup)
+    return PartitionSpec(*out)
+
+
+def get_rule(name: str, default=None):
+    """Read a (non-axis) entry from the active rule set — used for
+    implementation switches like ``moe_impl`` that the §Perf overrides
+    toggle per (arch, shape)."""
+    rules = _rules()
+    if rules is None:
+        return default
+    return rules.get(name, default)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _mesh()
+
+
+def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (identity when no
+    rules are installed)."""
+    rules = _rules()
+    mesh = _mesh()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(axes):
+        # Allow trailing-axis annotation: pad leading dims with None.
+        if x.ndim > len(axes):
+            axes = (None,) * (x.ndim - len(axes)) + tuple(axes)
+        else:
+            return x
+    spec = logical_to_spec(axes, rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

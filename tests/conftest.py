@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_close(a, b, *, rtol=2e-2, atol=1e-4, err_msg=""):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    np.testing.assert_allclose(a, b, rtol=rtol, atol=atol, err_msg=err_msg)
+
+
+def assert_finite(x, msg="non-finite values"):
+    arr = np.asarray(x, np.float32)
+    assert np.isfinite(arr).all(), msg

@@ -1,0 +1,173 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize
+from repro.core.graph import Graph
+from repro.core.modelstore import flatten_params, unflatten_params
+from repro.kernels import ops, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# quantization: round-trip error bound holds for ANY tensor
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(rows=st.integers(2, 64), cols=st.integers(2, 64),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2 ** 16))
+def test_quantize_error_bounded(rows, cols, scale, seed):
+    w = scale * jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    qt = quantize.quantize(w)           # axis=-1: per-COLUMN channels
+    err = np.abs(np.asarray(qt.dequantize() - w))
+    # symmetric absmax int8: round-to-nearest error <= one quantization
+    # step (= column absmax / 127); no clipping since absmax is the range
+    bound = np.abs(np.asarray(w)).max(0, keepdims=True) / 127.0
+    assert (err <= bound + 1e-6).all()
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 16))
+def test_quantize_idempotent_sign(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (8, 16))
+    qt = quantize.quantize(w)
+    dq = np.asarray(qt.dequantize())
+    w_np = np.asarray(w)
+    big = np.abs(w_np) > np.abs(w_np).max(-1, keepdims=True) * 0.05
+    assert (np.sign(dq[big]) == np.sign(w_np[big])).all()
+
+
+# ---------------------------------------------------------------------------
+# store codec: flatten/unflatten is the identity on any nested dict
+# ---------------------------------------------------------------------------
+
+
+_tree_strategy = st.recursive(
+    st.builds(lambda s: np.arange(int(np.prod(s)), dtype=np.float32)
+              .reshape(s),
+              st.lists(st.integers(1, 4), min_size=1, max_size=3)
+              .map(tuple)),
+    lambda children: st.dictionaries(
+        st.text(alphabet="abcdefgh", min_size=1, max_size=4),
+        children, min_size=1, max_size=3),
+    max_leaves=6)
+
+
+@SET
+@given(tree=st.dictionaries(st.text(alphabet="abcdefgh", min_size=1,
+                                    max_size=4),
+                            _tree_strategy, min_size=1, max_size=3))
+def test_flatten_unflatten_identity_property(tree):
+    rt = unflatten_params(flatten_params(tree))
+    assert jax.tree.structure(rt) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# softmax kernel: probability simplex for any finite input
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(rows=st.integers(1, 16), cols=st.integers(2, 128),
+       shift=st.floats(-1e3, 1e3), seed=st.integers(0, 2 ** 16))
+def test_softmax_simplex_property(rows, cols, shift, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) + shift
+    p = np.asarray(ops.softmax(x))
+    assert np.isfinite(p).all()
+    assert (p >= 0).all()
+    np.testing.assert_allclose(p.sum(-1), np.ones(rows), rtol=1e-4)
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 16), c=st.floats(-100.0, 100.0))
+def test_softmax_shift_invariance(seed, c):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    p1 = np.asarray(ops.softmax(x))
+    p2 = np.asarray(ops.softmax(x + c))
+    np.testing.assert_allclose(p1, p2, rtol=1e-3, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# graph shape inference: out_shape agrees with real execution for random
+# conv/pool/relu pipelines
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _graph_spec(draw):
+    c = draw(st.integers(1, 4))
+    hw = draw(st.sampled_from([8, 12, 16]))
+    layers = []
+    n = draw(st.integers(1, 4))
+    for i in range(n):
+        kind = draw(st.sampled_from(["conv", "pool", "relu"]))
+        if kind == "conv":
+            k = draw(st.sampled_from([1, 3]))
+            layers.append({"conv": (draw(st.integers(1, 6)), k, 1, k // 2)})
+        elif kind == "pool":
+            layers.append({"pool": ("max", 2, 2, 0)})
+        else:
+            layers.append({"relu": True})
+    return {"name": "prop", "input": [c, hw, hw], "num_classes": 0,
+            "blocks": layers}
+
+
+@SET
+@given(spec=_graph_spec(), seed=st.integers(0, 100))
+def test_graph_shapes_match_execution(spec, seed):
+    try:
+        g = Graph.from_spec(spec)
+    except Exception:
+        # a pool may not fit the (shrunken) map — structurally invalid spec
+        return
+    shapes = g.shapes()
+    if any(d <= 0 for s in shapes for d in s):
+        return
+    params = g.init_params(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (1, *spec["input"]))
+    y = g.apply(params, x)
+    assert tuple(y.shape[1:]) == shapes[-1]
+
+
+# ---------------------------------------------------------------------------
+# attention: output is a convex combination of values
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(s=st.sampled_from([16, 32, 64]), seed=st.integers(0, 2 ** 16))
+def test_attention_output_in_value_hull(s, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    out = np.asarray(ops.flash_attention(q, k, v), np.float32)
+    vmin = np.asarray(v).min()
+    vmax = np.asarray(v).max()
+    assert out.min() >= vmin - 1e-3
+    assert out.max() <= vmax + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul: exact integer arithmetic property
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(m=st.integers(1, 32), k=st.integers(1, 64), n=st.integers(1, 32),
+       seed=st.integers(0, 2 ** 16))
+def test_int8_matmul_exact_integers(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    aq = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    bq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    ones_m, ones_n = jnp.ones((m,)), jnp.ones((n,))
+    got = np.asarray(ops.int8_matmul(aq, bq, ones_m, ones_n))
+    want = np.asarray(aq, np.int64) @ np.asarray(bq, np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)

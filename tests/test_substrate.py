@@ -1,0 +1,189 @@
+"""Substrate: optimizer, data pipeline, checkpointing, common model parts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ByteTokenizer, DataConfig, SyntheticLM
+from repro.models import common as cm
+from repro.models.common import P
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    p = {"w": jnp.array([3.0, -2.0, 1.5])}
+    st = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        p, st, _ = opt.update(g, st, p)
+    # Adam oscillates near the optimum at fixed lr; 3.0 -> <0.01 is the
+    # convergence property we care about
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt_wd = AdamW(lr=1e-2, weight_decay=0.5)
+    opt_nw = AdamW(lr=1e-2, weight_decay=0.0)
+    p = {"w": jnp.ones((4,))}
+    zero_g = {"w": jnp.zeros((4,))}
+    p1, st1, _ = opt_wd.update(zero_g, opt_wd.init(p), p)
+    p2, st2, _ = opt_nw.update(zero_g, opt_nw.init(p), p)
+    assert float(p1["w"][0]) < float(p2["w"][0]) == 1.0
+
+
+def test_cosine_schedule_shape():
+    import jax.numpy as _jnp
+    sched = cosine_schedule(1e-3, warmup=10, total=100)
+    lr0 = float(sched(_jnp.int32(0)))
+    lr_w = float(sched(_jnp.int32(10)))
+    lr_end = float(sched(_jnp.int32(100)))
+    assert lr0 < lr_w
+    assert abs(lr_w - 1e-3) < 1e-9
+    assert lr_end <= 0.100001 * 1e-3   # cosine floor is 0.1*peak
+
+
+def test_adamw_state_pytree_roundtrip():
+    p = {"a": jnp.ones((3,)), "b": {"c": jnp.zeros((2, 2))}}
+    opt = AdamW(lr=1e-3)
+    st = opt.init(p)
+    leaves, treedef = jax.tree.flatten(st)
+    st2 = jax.tree.unflatten(treedef, leaves)
+    assert int(st2.step) == int(st.step)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_lm_deterministic_and_restartable():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=3)
+    a = SyntheticLM(cfg).batch(7)
+    b = SyntheticLM(cfg).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synthetic_lm_is_learnable_structure():
+    """Markov structure: successor pairs occur far above chance."""
+    cfg = DataConfig(vocab_size=128, seq_len=256, global_batch=8, seed=0,
+                     markov_weight=0.7)
+    ds = SyntheticLM(cfg)
+    b = ds.batch(0)["tokens"]
+    hits = (ds.successor[b[:, :-1]] == b[:, 1:]).mean()
+    # markov_weight=0.7 but chained replacements break some pairs; still
+    # orders of magnitude above the 1/128 chance rate
+    assert hits > 0.15
+
+
+def test_synthetic_lm_in_vocab_range():
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64
+    assert b["tokens"].dtype == np.int32
+
+
+def test_byte_tokenizer_roundtrip():
+    tk = ByteTokenizer()
+    for text in ("hello world", "ünïcødé ✓", ""):
+        ids = tk.encode(text)
+        assert ids[0] == tk.BOS and ids[-1] == tk.EOS
+        assert tk.decode(ids) == text
+
+
+# ---------------------------------------------------------------------------
+# Common model pieces
+# ---------------------------------------------------------------------------
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(KEY, (4, 32)) * 10.0
+    y = cm.rms_norm(x, jnp.zeros(32))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    q = jax.random.normal(KEY, (1, 8, 2, 64))
+    pos = jnp.arange(8)[None]
+    q_rot = cm.apply_rope(q, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(q_rot), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1), rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 64))
+    k_rot = cm.apply_rope(k, pos, 10000.0)
+    d02 = float(jnp.sum(q_rot[0, 0, 0] * k_rot[0, 2, 0]))
+    q5 = cm.apply_rope(q[:, 0:1], jnp.array([[5]]), 10000.0)
+    k7 = cm.apply_rope(k[:, 2:3], jnp.array([[7]]), 10000.0)
+    d57 = float(jnp.sum(q5[0, 0, 0] * k7[0, 0, 0]))
+    assert abs(d02 - d57) < 1e-3
+
+
+def test_attention_chunked_equals_full():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    full = cm.attention_full(q, k, v, causal=True)
+    chunk = cm.attention_chunked(q, k, v, causal=True, q_chunk=32,
+                                 k_chunk=32)
+    np.testing.assert_allclose(np.asarray(chunk, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_attention_decode_equals_last_row_of_full():
+    ks = jax.random.split(KEY, 3)
+    s = 64
+    q = jax.random.normal(ks[0], (1, s, 4, 32))
+    k = jax.random.normal(ks[1], (1, s, 2, 32))
+    v = jax.random.normal(ks[2], (1, s, 2, 32))
+    full = cm.attention_full(q, k, v, causal=True)
+    dec = cm.attention_decode(q[:, -1:], k, v, jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(dec[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cache_write_ring_semantics():
+    ck = jnp.zeros((1, 4, 1, 2))
+    cv = jnp.zeros((1, 4, 1, 2))
+    for pos in range(6):
+        k_new = jnp.full((1, 1, 1, 2), pos + 1.0)
+        ck, cv = cm.cache_write(ck, cv, k_new, k_new, jnp.int32(pos))
+    # slots hold tokens [5, 6, 3, 4] (pos 4->slot 0, 5->slot 1)
+    got = np.asarray(ck[0, :, 0, 0])
+    np.testing.assert_array_equal(got, [5.0, 6.0, 3.0, 4.0])
+
+
+def test_softmax_xent_matches_manual():
+    logits = jax.random.normal(KEY, (2, 8, 32))
+    labels = jax.random.randint(KEY, (2, 8), 0, 32)
+    got = float(cm.softmax_xent(logits, labels))
+    lp = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.take_along_axis(lp, labels[..., None], -1).mean())
+    assert abs(got - want) < 1e-5
+
+
+def test_init_params_template_structure():
+    tmpl = {"w": P((4, 8), ("fsdp", "tp_ff")),
+            "ln": P((8,), (None,), "zeros"),
+            "one": P((8,), (None,), "ones")}
+    params = cm.init_params(tmpl, KEY)
+    assert params["w"].shape == (4, 8)
+    np.testing.assert_array_equal(np.asarray(params["ln"]), np.zeros(8))
+    np.testing.assert_array_equal(np.asarray(params["one"]), np.ones(8))
+    # deterministic given the key
+    params2 = cm.init_params(tmpl, KEY)
+    np.testing.assert_array_equal(np.asarray(params["w"]),
+                                  np.asarray(params2["w"]))

@@ -2,9 +2,16 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run nin store  # substring filter
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI subset
+
+``--smoke`` runs a fast, CI-sized subset (and exports
+``REPRO_BENCH_SMOKE=1`` so benchmarks can shrink their problem sizes) —
+this is what .github/workflows/ci.yml executes so the perf scripts can't
+silently rot.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -24,12 +31,19 @@ BENCHES = [
     ("roofline", bench_roofline.main),              # deliverable (g)
 ]
 
+SMOKE = ("model_store", "compression", "fftconv", "serving")
+
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     failures = []
     t_all = time.perf_counter()
     for name, fn in BENCHES:
+        if smoke and name not in SMOKE:
+            continue
         if filters and not any(f in name for f in filters):
             continue
         t0 = time.perf_counter()

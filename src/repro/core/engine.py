@@ -1,111 +1,59 @@
-"""Inference engine with explicit command-queue semantics — the paper's
-Swift pipeline layer, figure 2.
+"""CNN inference engine on the shared device runtime.
 
-The seven-row Metal/OpenCL table in the paper maps here as:
+The residency / pipeline-cache / command-queue mechanics (the paper's
+seven-row Metal table) live in ``repro.runtime.base.DeviceRuntime`` —
+shared with the transformer ``MultiModelServer``.  This engine adds only
+what is CNN-specific: building a jitted graph pipeline from an imported
+DeepLearningKit-JSON model description.
 
-    1 MTLCreateSystemDefaultDevice  -> jax.devices()[0]
-    2 newCommandQueue               -> CommandQueue (in-order list + JAX
-                                       async dispatch underneath)
-    3 newDefaultLibrary             -> repro.kernels (shader library)
-    4 newFunctionWithName           -> jitted apply fn per model (pipeline
-                                       state object == compiled executable)
-    5 newBufferWithBytes            -> device_put into a reused buffer pool
-    6 commandBuffer.commit          -> enqueue() (dispatch, non-blocking)
-    7 waitUntilCompleted            -> fence()/block_until_ready
-
-Weights stay device-resident across calls (roadmap item 3: "avoid copying
-memory between CPU and GPU more than needed") — the engine counts the
-host->device bytes it avoided, which the benchmarks report.
+Kernel selection is by backend *name* (``ref`` | ``pallas`` | ``fft``),
+resolved per op from the registry (``repro.core.ops``) — there is no
+boolean kernel plumbing.  ``InferenceEngine(store, backend="pallas")``
+runs every op that declares a Pallas kernel on it and transparently
+falls back to the jnp reference elsewhere; a dict selects per kind,
+e.g. ``backend={"conv": "fft", "default": "pallas"}``.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.graph import Graph
-from repro.core.modelstore import ModelStore, ResidentCache
+from repro.core.graph import Backend, Graph
+from repro.core.modelstore import ModelStore
+from repro.runtime.base import CommandBuffer, DeviceRuntime
 
-
-@dataclass
-class CommandBuffer:
-    """One enqueued inference — mirrors MTLCommandBuffer."""
-    model: str
-    result: Any = None            # device array future (JAX async)
-    committed_at: float = 0.0
-    completed_at: Optional[float] = None
-
-    def wait_until_completed(self):
-        jax.block_until_ready(self.result)
-        self.completed_at = time.perf_counter()
-        return self.result
+__all__ = ["CommandBuffer", "InferenceEngine"]
 
 
-class InferenceEngine:
+class InferenceEngine(DeviceRuntime):
     """Loads models from the store, keeps them device-resident, executes
     batched requests through an in-order command queue."""
 
     def __init__(self, store: ModelStore, *, max_resident: int = 2,
-                 use_pallas: bool = False):
-        self.device = jax.devices()[0]                      # table row 1
-        self.cache = ResidentCache(store, capacity=max_resident)
-        self.queue: List[CommandBuffer] = []                # table row 2
-        self.use_pallas = use_pallas
-        self._pipelines: Dict[str, Callable] = {}           # table row 4
-        self.stats = {"switches": 0, "dispatches": 0,
-                      "weight_bytes_avoided": 0, "active_model": None}
+                 backend: Backend = None):
+        super().__init__(store, max_resident=max_resident)
+        self.backend = backend
 
-    # -- pipeline-state objects --
-
-    def _pipeline(self, name: str, spec, params) -> Callable:
-        if name in self._pipelines:
-            # weights already resident: count the copy we did NOT do
-            self.stats["weight_bytes_avoided"] += int(sum(
-                l.size * l.dtype.itemsize for l in jax.tree.leaves(params)))
-            return self._pipelines[name]
+    def _build_pipeline(self, spec):
         if spec.get("format") == "deeplearningkit-json-v1":
             from repro.core.importer import from_caffe_json
             graph, _ = from_caffe_json(spec)
-            fn = jax.jit(lambda p, x: graph.apply(
-                p, x, use_pallas=self.use_pallas))
-        else:
-            raise ValueError(f"unknown model format in spec: "
-                             f"{spec.get('format')!r}")
-        self._pipelines[name] = fn
-        return fn
+            return graph.jit_apply(backend=self.backend)
+        raise ValueError(f"unknown model format in spec: "
+                         f"{spec.get('format')!r}")
 
-    def activate(self, name: str, version: Optional[str] = None):
-        """Model switch: resolve from store (LRU device cache)."""
-        rec, spec, params = self.cache.get(name, version)
-        if self.stats["active_model"] != name:
-            self.stats["switches"] += 1
-            self.stats["active_model"] = name
-        fn = self._pipeline(name, spec, params)
+    def load(self, name: str, version: Optional[str] = None):
+        """Model switch: store -> LRU device cache -> compiled pipeline."""
+        rec, spec, params = self.activate(name, version)
+        fn = self.pipeline(name, params, lambda: self._build_pipeline(spec))
         return rec, spec, params, fn
-
-    # -- command queue --
 
     def enqueue(self, name: str, x, version: Optional[str] = None
                 ) -> CommandBuffer:
         """commit(): dispatch without blocking (JAX async dispatch)."""
-        _, _, params, fn = self.activate(name, version)
-        x = jax.device_put(x, self.device)                  # table row 5
-        cb = CommandBuffer(model=name, committed_at=time.perf_counter())
-        cb.result = fn(params, x)                           # table row 6
-        self.stats["dispatches"] += 1
-        self.queue.append(cb)
-        return cb
-
-    def fence(self):
-        """waitUntilCompleted for everything in flight (table row 7)."""
-        done = [cb.wait_until_completed() for cb in self.queue]
-        self.queue.clear()
-        return done
+        _, _, params, fn = self.load(name, version)
+        return self.dispatch(name, fn, params, self.put(x))
 
     def predict(self, name: str, x, version: Optional[str] = None):
         cb = self.enqueue(name, x, version)

@@ -6,63 +6,69 @@ layer.  Here the same role is played by a small layer IR:
 
     spec (list of layer dicts)  ->  Graph  ->  jitted apply(params, x)
 
-Supported ops mirror the paper's shader set — convolution, pooling,
-rectifier, softmax — plus dense/flatten (LeNet head) and the roadmap's
-FFT convolution.  Each op has a pure-jnp implementation here (the oracle
-and CPU path); the Pallas TPU kernels in repro.kernels implement the
-perf-critical ones and are selected with use_pallas=True.
+Op semantics live in ONE place: the op registry (``repro.core.ops``).
+Every ``Graph`` method — shape inference, parameter init, execution, the
+FLOP/byte cost model, the memory planner, even the Caffe-JSON importer —
+is a generic loop over :class:`~repro.core.ops.OpSpec` entries, so adding
+an op (or a new kernel backend for an existing op) is a single registry
+registration with no ``Graph`` edits.
+
+Backend selection is a per-op *name lookup* rather than boolean plumbing:
+``apply(..., backend="pallas")`` resolves each op's implementation from
+its declared backend table (``ref`` | ``pallas`` | ``fft`` | ...), falling
+back to the jnp reference when an op has no such backend.  A dict selects
+per-kind (``backend={"conv": "fft", "default": "pallas"}``), and a layer
+can pin its own via ``attrs["backend"]``.
 
 ``memory_plan`` implements roadmap item 5 (in-place calculation / buffer
-reuse): a liveness scan over the sequential graph that assigns each
-activation to a reusable slot, reporting peak bytes with and without
-reuse.  (JAX/XLA does this internally for real execution; the planner
-makes the saving measurable and testable, as the Swift engine did
-explicitly with MTLBuffer reuse.)
+reuse) as a *liveness* scan: each activation is live until its last
+consumer (the next layer, or a later residual ``add`` that references it
+by name), freed buffers go to a free list, and registry-declared
+``inplace`` ops reuse their input slot outright.  For plain chains this
+reduces to the classic two-slot ping-pong; residual references extend
+liveness and pin extra slots, as the Swift engine did with MTLBuffer
+reuse.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
+
+from repro.core.ops import (REGISTRY, ApplyContext, OpSpec,  # noqa: F401
+                            conv2d_ref, pool2d_ref)
+
+Backend = Union[None, str, Dict[str, str]]
 
 
 @dataclass
 class Layer:
-    kind: str                 # conv | pool | relu | softmax | dense | flatten
+    kind: str                 # any kind registered in repro.core.ops
     name: str
     attrs: Dict[str, Any]
 
+    @property
+    def spec(self) -> OpSpec:
+        return REGISTRY.op(self.kind)
+
     def out_shape(self, in_shape: Tuple[int, ...]) -> Tuple[int, ...]:
-        a = self.attrs
-        if self.kind == "conv":
-            c, h, w = in_shape
-            k, s, p = a["kernel"], a["stride"], a["pad"]
-            oh = (h + 2 * p - k) // s + 1
-            ow = (w + 2 * p - k) // s + 1
-            return (a["out_channels"], oh, ow)
-        if self.kind == "pool":
-            c, h, w = in_shape
-            k, s, p = a["kernel"], a["stride"], a["pad"]
-            oh = (h + 2 * p - k) // s + 1
-            ow = (w + 2 * p - k) // s + 1
-            return (c, oh, ow)
-        if self.kind in ("relu", "softmax"):
-            return in_shape
-        if self.kind == "flatten":
-            return (int(np.prod(in_shape)),)
-        if self.kind == "dense":
-            return (a["out_features"],)
-        raise ValueError(self.kind)
+        return tuple(self.spec.shape(self.attrs, tuple(in_shape)))
+
+
+def _resolve_backend(layer: Layer, backend: Backend) -> Optional[str]:
+    if "backend" in layer.attrs:
+        return layer.attrs["backend"]
+    if isinstance(backend, dict):
+        return backend.get(layer.kind, backend.get("default"))
+    return backend
 
 
 class Graph:
-    """Sequential layer graph (the paper's networks are all chains)."""
+    """Sequential layer graph with named-reference edges (residual adds)."""
 
     def __init__(self, name: str, input_shape: Tuple[int, ...],
                  layers: List[Layer]):
@@ -76,106 +82,77 @@ class Graph:
     def from_spec(cls, spec: Dict[str, Any]) -> "Graph":
         """Build from the compact block spec used in repro.configs."""
         layers: List[Layer] = []
-        shape = tuple(spec["input"])
         for i, blk in enumerate(spec["blocks"]):
-            if "conv" in blk:
-                oc, k, s, p = blk["conv"]
-                layers.append(Layer("conv", f"conv{i}", dict(
-                    out_channels=oc, kernel=k, stride=s, pad=p)))
-            elif "pool" in blk:
-                mode, k, s, p = blk["pool"]
-                layers.append(Layer("pool", f"pool{i}", dict(
-                    mode=mode, kernel=k, stride=s, pad=p)))
-            elif "relu" in blk:
-                layers.append(Layer("relu", f"relu{i}", {}))
-            elif "softmax" in blk:
-                layers.append(Layer("softmax", f"softmax{i}", {}))
-            elif "flatten" in blk:
-                layers.append(Layer("flatten", f"flatten{i}", {}))
-            elif "dense" in blk:
-                layers.append(Layer("dense", f"dense{i}", dict(
-                    out_features=blk["dense"])))
-            else:
+            kinds = [k for k in blk if k in REGISTRY]
+            if len(kinds) != 1:
                 raise ValueError(f"unknown block {blk}")
-        return cls(spec["name"], shape, layers)
+            kind = kinds[0]
+            op = REGISTRY.op(kind)
+            attrs = op.from_block(blk[kind]) if op.from_block else {}
+            layers.append(Layer(kind, f"{kind}{i}", attrs))
+        return cls(spec["name"], tuple(spec["input"]), layers)
 
     # -- shapes / params ----------------------------------------------------
+
+    def _referenced(self) -> Dict[str, int]:
+        """layer name -> index of its LAST consuming reference layer."""
+        out: Dict[str, int] = {}
+        names = {l.name for l in self.layers}
+        for j, l in enumerate(self.layers):
+            if l.spec.references is None:
+                continue
+            for src in l.spec.references(l.attrs):
+                if src not in names:
+                    raise ValueError(
+                        f"layer {l.name!r} references unknown layer {src!r}")
+                out[src] = j
+        return out
 
     def shapes(self) -> List[Tuple[int, ...]]:
         """Activation shape after every layer (excluding batch dim)."""
         out = []
         s = self.input_shape
+        by_name: Dict[str, Tuple[int, ...]] = {}
         for l in self.layers:
-            if l.kind == "conv" and "in_channels" not in l.attrs:
-                l.attrs["in_channels"] = s[0]
-            if l.kind == "dense" and "in_features" not in l.attrs:
-                l.attrs["in_features"] = int(np.prod(s))
+            if l.spec.infer is not None:
+                l.spec.infer(l.attrs, s)
+            if l.spec.references is not None:
+                for src in l.spec.references(l.attrs):
+                    if by_name.get(src) != s:
+                        raise ValueError(
+                            f"{l.name!r} adds {src!r} with shape "
+                            f"{by_name.get(src)} to activation of shape {s}")
             s = l.out_shape(s)
+            by_name[l.name] = s
             out.append(s)
         return out
 
     def init_params(self, key) -> Dict[str, Dict[str, jax.Array]]:
-        self.shapes()  # resolve in_channels/in_features
+        self.shapes()  # resolve inferred attrs (in_channels/in_features/...)
         params: Dict[str, Dict[str, jax.Array]] = {}
         for l in self.layers:
             key, sub = jax.random.split(key)
-            if l.kind == "conv":
-                a = l.attrs
-                fan_in = a["in_channels"] * a["kernel"] ** 2
-                w = jax.random.normal(
-                    sub, (a["out_channels"], a["in_channels"],
-                          a["kernel"], a["kernel"])) * math.sqrt(2 / fan_in)
-                params[l.name] = {"w": w.astype(jnp.float32),
-                                  "b": jnp.zeros((a["out_channels"],))}
-            elif l.kind == "dense":
-                a = l.attrs
-                w = jax.random.normal(sub, (a["in_features"],
-                                            a["out_features"])) \
-                    * math.sqrt(2 / a["in_features"])
-                params[l.name] = {"w": w.astype(jnp.float32),
-                                  "b": jnp.zeros((a["out_features"],))}
+            if l.spec.init is not None:
+                params[l.name] = l.spec.init(sub, l.attrs)
         return params
 
     # -- execution ----------------------------------------------------------
 
-    def apply(self, params, x, *, use_pallas: bool = False,
-              fft_conv: bool = False):
-        """x: (B, C, H, W) or (B, F). Returns the network output."""
-        if use_pallas or fft_conv:
-            from repro.kernels import ops as kops
-        for l in self.layers:
-            if l.kind == "conv":
-                p = params[l.name]
-                if fft_conv:
-                    from repro.core.fftconv import fft_conv2d
-                    x = fft_conv2d(x, p["w"], p["b"], stride=l.attrs["stride"],
-                                   pad=l.attrs["pad"])
-                elif use_pallas:
-                    x = kops.conv2d(x, p["w"], p["b"],
-                                    stride=l.attrs["stride"],
-                                    pad=l.attrs["pad"])
-                else:
-                    x = conv2d_ref(x, p["w"], p["b"],
-                                   stride=l.attrs["stride"],
-                                   pad=l.attrs["pad"])
-            elif l.kind == "pool":
-                a = l.attrs
-                if use_pallas:
-                    x = kops.pool2d(x, mode=a["mode"], kernel=a["kernel"],
-                                    stride=a["stride"], pad=a["pad"])
-                else:
-                    x = pool2d_ref(x, mode=a["mode"], kernel=a["kernel"],
-                                   stride=a["stride"], pad=a["pad"])
-            elif l.kind == "relu":
-                x = kops.relu(x) if use_pallas else jax.nn.relu(x)
-            elif l.kind == "softmax":
-                x = x.reshape(x.shape[0], -1)
-                x = kops.softmax(x) if use_pallas else jax.nn.softmax(x, -1)
-            elif l.kind == "flatten":
-                x = x.reshape(x.shape[0], -1)
-            elif l.kind == "dense":
-                p = params[l.name]
-                x = x @ p["w"] + p["b"]
+    def apply(self, params, x, *, backend: Backend = None):
+        """x: (B, C, H, W) or (B, F). Returns the network output.
+
+        ``backend`` selects per-op implementations by name: a string
+        applies to every op that declares it ("ref" | "pallas" | "fft"),
+        a dict selects per kind with a "default" entry, and ops without
+        the requested backend fall back to the jnp reference.
+        """
+        ctx = ApplyContext()
+        save_for = self._referenced()
+        for i, l in enumerate(self.layers):
+            fn = l.spec.backend(_resolve_backend(l, backend))
+            x = fn(x, params.get(l.name), l.attrs, ctx)
+            if l.name in save_for:
+                ctx.saved[l.name] = x
         return x
 
     def jit_apply(self, **kw):
@@ -187,63 +164,73 @@ class Graph:
         """Multiply-add FLOPs (2*MACs) for one forward pass."""
         total = 0
         s = self.input_shape
-        for l in self.layers:
-            o = l.out_shape(s)
-            a = l.attrs
-            if l.kind == "conv":
-                total += 2 * int(np.prod(o)) * a["in_channels"] * a["kernel"] ** 2
-            elif l.kind == "dense":
-                total += 2 * a["in_features"] * a["out_features"]
-            elif l.kind == "pool":
-                total += int(np.prod(o)) * a["kernel"] ** 2
-            else:
-                total += int(np.prod(o))
+        for l, o in zip(self.layers, self.shapes()):
+            total += l.spec.op_flops(l.attrs, s, o)
             s = o
         return total * batch
 
     def bytes_moved(self, batch: int = 1, elem: int = 4) -> int:
         """Activation + weight traffic for one pass (no reuse)."""
         total = int(np.prod(self.input_shape)) * elem
-        s = self.input_shape
-        for l in self.layers:
-            o = l.out_shape(s)
+        for l, o in zip(self.layers, self.shapes()):
             total += int(np.prod(o)) * elem
-            a = l.attrs
-            if l.kind == "conv":
-                total += a["out_channels"] * a["in_channels"] * a["kernel"] ** 2 * elem
-            elif l.kind == "dense":
-                total += a["in_features"] * a["out_features"] * elem
-            s = o
+            total += l.spec.op_weight_bytes(l.attrs, elem)
         return total * batch
 
     def memory_plan(self, batch: int = 1, elem: int = 4) -> Dict[str, Any]:
         """Liveness-based buffer-slot assignment (roadmap item 5).
 
-        For a chain, activation i is live only while computing i+1, so two
-        ping-pong slots sized by the largest adjacent pair suffice; ops that
-        can run in place (relu, softmax) reuse their input slot outright.
+        Activation i is live from its producing layer until its last
+        consumer — layer i+1 for the chain edge, or a later ``add`` that
+        references it by name.  Dead buffers return to a free list;
+        registry-declared ``inplace`` ops reuse their input slot when the
+        input dies at this step.  Chains collapse to two ping-pong slots;
+        residual references pin their source buffer until consumed.
         """
         shapes = [self.input_shape] + self.shapes()
         sizes = [int(np.prod(s)) * elem * batch for s in shapes]
-        inplace = {"relu", "softmax", "flatten"}
         naive = sum(sizes)
-        slots: List[int] = []          # slot -> current byte size
+        n = len(self.layers)
+        ref_last = self._referenced()
+        name_to_idx = {l.name: i for i, l in enumerate(self.layers)}
+        # last step at which activation i (output of layer i-1; i=0 is the
+        # graph input) is read
+        last_use = [min(i, n - 1) for i in range(n + 1)]
+        for src_name, consumer in ref_last.items():
+            i = name_to_idx[src_name] + 1
+            last_use[i] = max(last_use[i], consumer)
+
+        slots: List[int] = []                  # slot -> high-water bytes
+        free: List[int] = []
+        act_slot = [-1] * (n + 1)
         assignment: List[Tuple[str, int, int]] = []
-        cur_slot = 0
+
         slots.append(sizes[0])
-        for i, l in enumerate(self.layers):
-            out_sz = sizes[i + 1]
-            if l.kind in inplace:
-                slot = cur_slot      # in-place: reuse the input slot
+        act_slot[0] = 0
+        for step, l in enumerate(self.layers):
+            out_sz = sizes[step + 1]
+            in_slot = act_slot[step]
+            input_dies = last_use[step] <= step
+            if l.spec.inplace and input_dies:
+                slot = in_slot
                 slots[slot] = max(slots[slot], out_sz)
             else:
-                slot = 1 - cur_slot if len(slots) > 1 else len(slots)
-                if slot >= len(slots):
-                    slots.append(out_sz)
-                else:
+                # the op reads its input while writing its output, so the
+                # input slot is only released AFTER allocation
+                if free:
+                    slot = free.pop()
                     slots[slot] = max(slots[slot], out_sz)
-                cur_slot = slot
+                else:
+                    slot = len(slots)
+                    slots.append(out_sz)
+                if input_dies:
+                    free.append(in_slot)
+            act_slot[step + 1] = slot
             assignment.append((l.name, slot, out_sz))
+            # release referenced activations whose last read was this step
+            for i in range(step):
+                if last_use[i + 1] == step and i + 1 != step:
+                    free.append(act_slot[i + 1])
         planned = sum(slots)
         return {
             "naive_bytes": naive,
@@ -252,38 +239,3 @@ class Graph:
             "num_slots": len(slots),
             "assignment": assignment,
         }
-
-
-# ---------------------------------------------------------------------------
-# Pure-jnp layer implementations (oracles for the Pallas kernels)
-# ---------------------------------------------------------------------------
-
-
-def conv2d_ref(x, w, b=None, *, stride: int = 1, pad: int = 0):
-    """x: (B, C, H, W); w: (O, C, K, K)."""
-    out = lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride),
-        padding=[(pad, pad), (pad, pad)],
-        dimension_numbers=("NCHW", "OIHW", "NCHW"))
-    if b is not None:
-        out = out + b[None, :, None, None]
-    return out
-
-
-def pool2d_ref(x, *, mode: str = "max", kernel: int = 2, stride: int = 2,
-               pad: int = 0):
-    if mode == "max":
-        init, op = -jnp.inf, lax.max
-    else:
-        init, op = 0.0, lax.add
-    out = lax.reduce_window(
-        x, init, op, (1, 1, kernel, kernel), (1, 1, stride, stride),
-        [(0, 0), (0, 0), (pad, pad), (pad, pad)])
-    if mode == "avg":
-        ones = jnp.ones_like(x)
-        denom = lax.reduce_window(
-            ones, 0.0, lax.add, (1, 1, kernel, kernel),
-            (1, 1, stride, stride),
-            [(0, 0), (0, 0), (pad, pad), (pad, pad)])
-        out = out / denom
-    return out

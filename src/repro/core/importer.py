@@ -20,11 +20,13 @@ sidecar .npz — the same two-file split the paper's converter produced.
         {"type": "Flatten" | "Softmax", ...}]}
 
 ``to_caffe_json``/``from_caffe_json`` round-trip Graph+params through this
-schema; tests assert the round trip is exact.
+schema.  The type mapping itself is NOT hardcoded here: each op in
+``repro.core.ops.REGISTRY`` declares its Caffe type name and attr
+encode/decode hooks, so an op registered there (e.g. ``batchnorm`` ->
+``BatchNorm``) imports and exports with no importer edits.
 """
 from __future__ import annotations
 
-import io
 import json
 from typing import Any, Dict, Optional, Tuple
 
@@ -33,9 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, Layer
-
-_POOL_MODES = {"MAX": "max", "AVE": "avg"}
-_POOL_MODES_INV = {v: k for k, v in _POOL_MODES.items()}
+from repro.core.ops import REGISTRY
 
 
 def to_caffe_json(graph: Graph, params=None, *, inline_weights: bool = False
@@ -45,30 +45,12 @@ def to_caffe_json(graph: Graph, params=None, *, inline_weights: bool = False
     layers = []
     weights: Dict[str, np.ndarray] = {}
     for l in graph.layers:
-        a = l.attrs
-        if l.kind == "conv":
-            entry = {"type": "Convolution", "name": l.name,
-                     "convolution_param": {
-                         "num_output": a["out_channels"],
-                         "kernel_size": a["kernel"], "stride": a["stride"],
-                         "pad": a["pad"]}}
-        elif l.kind == "pool":
-            entry = {"type": "Pooling", "name": l.name,
-                     "pooling_param": {
-                         "pool": _POOL_MODES_INV[a["mode"]],
-                         "kernel_size": a["kernel"], "stride": a["stride"],
-                         "pad": a["pad"]}}
-        elif l.kind == "relu":
-            entry = {"type": "ReLU", "name": l.name}
-        elif l.kind == "softmax":
-            entry = {"type": "Softmax", "name": l.name}
-        elif l.kind == "flatten":
-            entry = {"type": "Flatten", "name": l.name}
-        elif l.kind == "dense":
-            entry = {"type": "InnerProduct", "name": l.name,
-                     "inner_product_param": {"num_output": a["out_features"]}}
-        else:
-            raise ValueError(l.kind)
+        spec = REGISTRY.op(l.kind)
+        if not spec.caffe_type:
+            raise ValueError(f"op {l.kind!r} has no Caffe interchange type")
+        entry = {"type": spec.caffe_type, "name": l.name}
+        if spec.to_caffe is not None:
+            entry.update(spec.to_caffe(l.attrs))
         if params is not None and l.name in params:
             for pname, arr in params[l.name].items():
                 arr = np.asarray(arr)
@@ -91,29 +73,9 @@ def from_caffe_json(doc: Dict[str, Any],
     params: Dict[str, Dict[str, jax.Array]] = {}
     for entry in doc["layers"]:
         t, name = entry["type"], entry["name"]
-        if t == "Convolution":
-            p = entry["convolution_param"]
-            layers.append(Layer("conv", name, dict(
-                out_channels=p["num_output"], kernel=p["kernel_size"],
-                stride=p.get("stride", 1), pad=p.get("pad", 0))))
-        elif t == "Pooling":
-            p = entry["pooling_param"]
-            layers.append(Layer("pool", name, dict(
-                mode=_POOL_MODES[p.get("pool", "MAX")],
-                kernel=p["kernel_size"], stride=p.get("stride", 1),
-                pad=p.get("pad", 0))))
-        elif t == "ReLU":
-            layers.append(Layer("relu", name, {}))
-        elif t == "Softmax":
-            layers.append(Layer("softmax", name, {}))
-        elif t == "Flatten":
-            layers.append(Layer("flatten", name, {}))
-        elif t == "InnerProduct":
-            p = entry["inner_product_param"]
-            layers.append(Layer("dense", name, dict(
-                out_features=p["num_output"])))
-        else:
-            raise ValueError(f"unsupported Caffe layer type {t!r}")
+        spec = REGISTRY.by_caffe_type(t)
+        attrs = spec.from_caffe(entry) if spec.from_caffe is not None else {}
+        layers.append(Layer(spec.kind, name, attrs))
         blob = entry.get("blobs")
         if blob:
             params[name] = {

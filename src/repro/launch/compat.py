@@ -1,0 +1,53 @@
+"""JAX-version compatibility shims for the launch layer.
+
+The mesh/sharding API moved between JAX releases:
+
+  * ``jax.sharding.AxisType`` (explicit-sharding axis kinds) does not
+    exist in 0.4.x — ``make_mesh`` gates the kwarg on availability.
+  * ``jax.sharding.AbstractMesh`` changed signature: 0.4.x takes one
+    ``((name, size), ...)`` tuple, newer JAX takes ``(sizes, names)``.
+
+Everything in repro that builds meshes goes through these helpers so the
+codebase runs unmodified on either API generation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def has_axis_type() -> bool:
+    return hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices=None, auto_axis_types: bool = False):
+    """``jax.make_mesh`` with ``axis_types`` passed only where supported."""
+    kw = {}
+    if auto_axis_types and has_axis_type():
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    if devices is not None:
+        kw["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new API) or ``jax.experimental.shard_map`` with
+    the ``check_vma``/``check_rep`` kwarg rename papered over."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` construction."""
+    am = jax.sharding.AbstractMesh
+    try:
+        return am(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        # 0.4.x signature: AbstractMesh(((name, size), ...))
+        return am(tuple(zip(tuple(axis_names), tuple(axis_sizes))))

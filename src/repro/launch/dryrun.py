@@ -118,7 +118,7 @@ def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_costs.xla_cost_analysis(compiled)   # version-portable dict
     hlo = compiled.as_text()
     # trip-count-aware analysis (cost_analysis counts while bodies ONCE —
     # every model scans over layers, so it understates by ~num_layers)

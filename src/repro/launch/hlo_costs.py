@@ -66,6 +66,19 @@ _FREE_OPS = {
 }
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a one-element list of per-program dicts, newer JAX
+    returns the dict itself; either way callers get a plain dict with
+    ``.get`` (empty when XLA provides nothing).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def _type_bytes(type_str: str) -> int:
     """Sum bytes over all array shapes inside an HLO type string."""
     total = 0

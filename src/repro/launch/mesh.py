@@ -13,6 +13,8 @@ import math
 
 import jax
 
+from repro.launch.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False, shape=None):
     """Default 256-chip pod is (data=16, model=16); §Perf overrides may
@@ -31,12 +33,12 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"(repro.launch.dryrun does this) or on real hardware")
     if len(devs) == n:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes, devices=devs[:n])
+        return make_mesh(shape, axes)
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_host_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist (CPU smoke tests)."""
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh((data, model_axis), ("data", "model"))
+    return make_mesh((data, model_axis), ("data", "model"))

@@ -5,8 +5,11 @@
 
 If the store is empty the driver bootstraps it by publishing a
 reduced-config model with random weights (so the example is runnable
-offline) — the paper's deployment flow: store -> resident cache -> batched
-prefill/decode, with hot switching between models.
+offline) — the paper's deployment flow: store -> resident cache ->
+continuous-batching generation, with hot switching between models.
+Generation runs on the slot-based scheduler (device-side sampling,
+zero host syncs per token); pass ``--aligned`` to drive the legacy
+aligned-batch baseline instead for comparison.
 """
 from __future__ import annotations
 
@@ -17,10 +20,10 @@ import jax
 import numpy as np
 
 from repro import models
-from repro.checkpoint.ckpt import load_published, publish_checkpoint
+from repro.checkpoint.ckpt import publish_checkpoint
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.modelstore import ModelStore
-from repro.serving.engine import MultiModelServer, Request, ServingEngine
+from repro.serving.engine import MultiModelServer, Request
 
 
 def ensure_model(store: ModelStore, arch: str, *, seed: int = 0):
@@ -46,15 +49,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--aligned", action="store_true",
+                    help="use the legacy aligned-batch loop (baseline)")
     args = ap.parse_args()
     model_names = args.model or ["tinyllama-1.1b", "qwen3-0.6b"]
 
     store = ModelStore(args.store)
     for m in model_names:
         ensure_model(store, m)
+    # power-of-two prefill buckets bound XLA compiles to a handful of
+    # prompt shapes instead of one executable per distinct length
+    buckets, b = [], 4
+    while b < args.prompt_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(b)
     server = MultiModelServer(store, max_resident=2,
                               max_batch=args.max_batch,
-                              cache_len=args.cache_len)
+                              cache_len=args.cache_len,
+                              prefill_buckets=buckets)
     rng = np.random.default_rng(0)
     uid = 0
     for round_i, name in enumerate(model_names * 2):   # exercise hot swap
@@ -66,7 +79,10 @@ def main():
                                 max_new_tokens=args.max_new))
             uid += 1
         t0 = time.perf_counter()
-        stats = server.serve(reqs, model=name)
+        if args.aligned:
+            stats = server._engine(name).generate_aligned(reqs)
+        else:
+            stats = server.serve(reqs, model=name)
         dt = time.perf_counter() - t0
         switch_ms = server.switch_log[-1][1] * 1e3
         print(f"[{round_i}] model={name:20s} reqs={len(reqs)} "

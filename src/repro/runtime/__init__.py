@@ -1,0 +1,11 @@
+"""Shared GPU-runtime substrate — the paper's single Metal pipeline layer.
+
+``repro.runtime.base`` holds the residency / stats / command-queue logic
+that every executor shares (CNN inference, transformer serving, the
+multi-model server); ``repro.runtime.scheduler`` is the slot-based
+continuous-batching decode scheduler built on top of it.
+"""
+from repro.runtime.base import CommandBuffer, DeviceRuntime
+from repro.runtime.scheduler import ContinuousBatchingScheduler
+
+__all__ = ["CommandBuffer", "DeviceRuntime", "ContinuousBatchingScheduler"]

@@ -1,19 +1,30 @@
-"""Batched serving engine: prefill + decode with KV caches, hot model swap.
+"""Serving engines: continuous-batching generation + hot model swap.
 
 The paper's deployment story ("switch between several Deep Learning
 Models ... or run several models in parallel on the same GPU", section 2)
-applied to the assigned transformer architectures: requests are grouped
-into aligned batches, prompts prefill in one pass, then tokens decode
-step-by-step against the model's cache (ring-buffer KV / RWKV state /
-RG-LRU state — whatever the family maintains).  Model switching goes
-through the ResidentCache so a warm swap costs no host->device traffic.
+applied to the assigned transformer architectures, rebuilt on the shared
+runtime layer:
+
+  * :class:`ServingEngine` fronts one model.  Generation goes through
+    ``repro.runtime.scheduler.ContinuousBatchingScheduler`` — slot-based
+    continuous batching with device-side sampling, per-request
+    temperature, mid-flight admission/retirement, and zero host syncs
+    per generated token.  The old aligned-batch loop survives only as
+    ``generate_aligned``, the benchmark baseline.
+  * :class:`MultiModelServer` is a store-backed
+    ``repro.runtime.base.DeviceRuntime``: requests resolve through the
+    LRU ``ResidentCache`` (a warm swap costs no host->device traffic),
+    optionally routed by the meta-selector, then generate on the chosen
+    model's engine.
+
+To serve a new model family no serving code changes: the scheduler vmaps
+the family module's own ``prefill``/``decode_step`` over lanes.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,17 +32,11 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ArchConfig
-from repro.core.modelstore import ModelStore, ResidentCache
+from repro.core.modelstore import ModelStore
+from repro.runtime.base import DeviceRuntime
+from repro.runtime.scheduler import ContinuousBatchingScheduler, Request
 
-
-@dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    output: List[int] = field(default_factory=list)
-    done: bool = False
+__all__ = ["Request", "GenStats", "ServingEngine", "MultiModelServer"]
 
 
 @dataclass
@@ -45,24 +50,81 @@ class GenStats:
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
 
 
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class ServingEngine:
-    """Single-model engine: aligned-batch prefill/decode."""
+    """Single-model engine fronting the continuous-batching scheduler."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 cache_len: int = 256, pad_id: int = 0, seed: int = 0):
+                 cache_len: int = 256, pad_id: int = 0, seed: int = 0,
+                 prefill_buckets: Optional[List[int]] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.pad_id = pad_id
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed
+        self.prefill_buckets = prefill_buckets
+        self._sched: Optional[ContinuousBatchingScheduler] = None
+        # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
             lambda p, tok, cache, pos: self.mod.decode_step(
                 cfg, p, tok, cache, pos))
         self._prefill = jax.jit(
             lambda p, toks: self.mod.prefill(cfg, p, toks, cache_len,
                                              cache_dtype=jnp.float32))
+        self.key = jax.random.PRNGKey(seed)
+
+    # -- continuous batching (the serving path) -----------------------------
+
+    def scheduler(self, *, max_new_cap: int = 0
+                  ) -> ContinuousBatchingScheduler:
+        """The engine's resident scheduler, (re)built only when a request
+        needs a larger device-side output buffer than currently compiled
+        (bare access never rebuilds)."""
+        if self._sched is None or self._sched.max_new_cap < max_new_cap:
+            pending = []
+            if self._sched is not None:
+                if any(r is not None for r in self._sched.slots):
+                    raise RuntimeError(
+                        "cannot grow max_new_cap while requests are in "
+                        "flight — drain the scheduler first")
+                pending = list(self._sched.pending)  # carry queued requests
+            cap = _next_pow2(max(max_new_cap,
+                                 self._sched.max_new_cap if self._sched
+                                 else 0, 16))
+            self._sched = ContinuousBatchingScheduler(
+                self.cfg, self.params, max_slots=self.max_batch,
+                cache_len=self.cache_len, max_new_cap=cap,
+                pad_id=self.pad_id, seed=self.seed,
+                prefill_buckets=self.prefill_buckets)
+            self._sched.pending.extend(pending)
+        return self._sched
+
+    def generate_batch(self, requests: List[Request]) -> GenStats:
+        """Run requests to completion through the continuous scheduler.
+
+        More requests than ``max_batch`` is fine — excess queue and are
+        admitted as lanes retire (mid-flight admission)."""
+        if not requests:
+            return GenStats()
+        sched = self.scheduler(
+            max_new_cap=max(r.max_new_tokens for r in requests))
+        p0, d0, t0 = sched.prefill_s, sched.decode_s, sched.tokens_generated
+        for r in requests:
+            sched.submit(r)
+        sched.run()
+        return GenStats(prefill_s=sched.prefill_s - p0,
+                        decode_s=sched.decode_s - d0,
+                        tokens_out=sched.tokens_generated - t0)
+
+    # -- legacy aligned-batch baseline --------------------------------------
 
     def _sample(self, logits, temperature: float):
         if temperature <= 0.0:
@@ -70,8 +132,10 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
         return jax.random.categorical(sub, logits / temperature, axis=-1)
 
-    def generate_batch(self, requests: List[Request]) -> GenStats:
-        """Run a group of <= max_batch requests to completion."""
+    def generate_aligned(self, requests: List[Request]) -> GenStats:
+        """The pre-scheduler loop: aligned batch, one global temperature,
+        one host sync per token.  Kept as the benchmark baseline that
+        ``benchmarks/bench_serving.py`` compares the scheduler against."""
         assert len(requests) <= self.max_batch
         stats = GenStats()
         b = len(requests)
@@ -90,7 +154,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         for step in range(max_new):
             nxt = self._sample(last, requests[0].temperature)
-            nxt = np.asarray(nxt).astype(np.int32)
+            nxt = np.asarray(nxt).astype(np.int32)          # host sync/token
             for i, r in enumerate(requests):
                 if not r.done and len(r.output) < r.max_new_tokens:
                     r.output.append(int(nxt[i]))
@@ -108,32 +172,28 @@ class ServingEngine:
         return stats
 
 
-class MultiModelServer:
+class MultiModelServer(DeviceRuntime):
     """Store-backed server: context -> (meta-selected) model -> generate.
 
     This is the paper's on-device scenario end-to-end: a catalog of
     pre-trained models, a meta-model picking one per request context, and
-    LRU-resident weights for rapid switching.
+    LRU-resident weights for rapid switching — all on the shared
+    ``DeviceRuntime`` residency/stats substrate.
     """
 
     def __init__(self, store: ModelStore, *, max_resident: int = 2,
                  selector=None, **engine_kw):
-        self.cache = ResidentCache(store, capacity=max_resident)
+        super().__init__(store, max_resident=max_resident)
         self.selector = selector
         self.engine_kw = engine_kw
         self._engines: Dict[Tuple[str, str], ServingEngine] = {}
-        self.switch_log: List[Tuple[str, float]] = []
 
     def _engine(self, name: str, version: Optional[str] = None):
-        from repro.checkpoint.ckpt import load_published
-        t0 = time.perf_counter()
-        rec, spec, params = self.cache.get(name, version)
-        from repro.configs.base import ArchConfig
-        cfg = ArchConfig(**rec.load_spec()["arch"])
+        rec, spec, params = self.activate(name, version)
+        cfg = ArchConfig(**spec["arch"])
         key = (rec.name, rec.version)
         if key not in self._engines:
             self._engines[key] = ServingEngine(cfg, params, **self.engine_kw)
-        self.switch_log.append((name, time.perf_counter() - t0))
         return self._engines[key]
 
     def serve(self, requests: List[Request], *, model: Optional[str] = None,

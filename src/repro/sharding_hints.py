@@ -69,7 +69,11 @@ def logical_to_spec(axes: Sequence[Optional[str]],
                     out.append(None)
                     continue
         used.update(tup)
-        out.append(tup[0] if len(tup) == 1 else tup)
+        # preserve the rule's declared form: a tuple-valued rule stays a
+        # tuple (even length-1, e.g. batch=("data",)), a string rule stays
+        # scalar — callers compare specs structurally
+        out.append(tup if isinstance(target, (tuple, list)) else
+                   (tup[0] if len(tup) == 1 else tup))
     return PartitionSpec(*out)
 
 

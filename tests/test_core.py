@@ -63,7 +63,7 @@ def test_lenet_applies(lenet):
 def test_graph_pallas_path_matches_jnp(nin):
     g, params, x = nin
     y_jnp = g.apply(params, x)
-    y_pl = g.apply(params, x, use_pallas=True)
+    y_pl = g.apply(params, x, backend="pallas")
     assert_close(y_pl, y_jnp, rtol=1e-4)
 
 

@@ -29,8 +29,8 @@ CODE = textwrap.dedent("""
     key = jax.random.PRNGKey(0)
     params = models.init_params(cfg, key)
     tokens = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"), auto_axis_types=True)
     outs = {}
     for impl, extra in [("dense", {}), ("a2a", {"tp_ff": None}),
                         ("local", {"experts": None, "tp_ff": None})]:

@@ -1,0 +1,199 @@
+"""Op registry: single source of truth for layer-op semantics.
+
+The acceptance property of the registry refactor: adding an op (or a new
+kernel backend for an existing op) is ONE registry entry — shape
+inference, param init, execution, cost model, memory planner, and the
+Caffe-JSON importer all pick it up with no Graph/importer edits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import importer
+from repro.core.graph import Graph, Layer
+from repro.core.ops import REGISTRY, OpSpec
+
+from conftest import assert_close
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# batchnorm: new op as a pure registry entry
+# ---------------------------------------------------------------------------
+
+
+def _bn_graph():
+    return Graph("bn-net", (3, 8, 8), [
+        Layer("conv", "conv0", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("batchnorm", "bn0", {}),
+        Layer("relu", "relu0", {}),
+        Layer("flatten", "flat0", {}),
+        Layer("dense", "fc0", dict(out_features=10)),
+        Layer("softmax", "sm0", {}),
+    ])
+
+
+def test_batchnorm_requires_only_registry_entry():
+    """batchnorm was added purely via REGISTRY.register: shapes, init,
+    apply, cost model, memory plan, and importer all work untouched."""
+    g = _bn_graph()
+    shapes = g.shapes()
+    assert shapes[1] == (4, 8, 8)                 # shape rule picked up
+    assert g.layers[1].attrs["num_features"] == 4  # infer hook ran
+    params = g.init_params(KEY)
+    assert set(params["bn0"]) == {"scale", "bias", "mean", "var"}
+    x = jax.random.normal(KEY, (2, 3, 8, 8))
+    y = g.apply(params, x)
+    assert y.shape == (2, 10)
+    assert g.flops() > 0 and g.bytes_moved() > 0
+    assert g.memory_plan()["planned_bytes"] > 0
+
+
+def test_batchnorm_normalizes_with_stats():
+    g = _bn_graph()
+    params = g.init_params(KEY)
+    # non-trivial statistics: the op must apply them, not just pass through
+    params["bn0"]["mean"] = jnp.full((4,), 2.0)
+    params["bn0"]["scale"] = jnp.full((4,), 3.0)
+    x = jax.random.normal(KEY, (2, 3, 8, 8))
+    from repro.core.ops import batchnorm_ref, conv2d_ref
+    h = conv2d_ref(x, params["conv0"]["w"], params["conv0"]["b"],
+                   stride=1, pad=1)
+    want = 3.0 * (h - 2.0) / np.sqrt(1.0 + 1e-5)
+    got = batchnorm_ref(h, params["bn0"], g.layers[1].attrs)
+    assert_close(got, want, rtol=1e-5)
+
+
+def test_batchnorm_imports_and_exports():
+    """The importer maps batchnorm <-> Caffe "BatchNorm" with no importer
+    edits (type table comes from the registry)."""
+    g = _bn_graph()
+    params = g.init_params(KEY)
+    doc, weights = importer.to_caffe_json(g, params)
+    types = [l["type"] for l in doc["layers"]]
+    assert "BatchNorm" in types
+    g2, p2 = importer.from_caffe_json(doc, weights)
+    x = jax.random.normal(KEY, (2, 3, 8, 8))
+    assert_close(g2.apply(p2, x), g.apply(params, x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# residual add: named references break the chain-only assumption
+# ---------------------------------------------------------------------------
+
+
+def _res_graph():
+    return Graph("res-net", (4, 8, 8), [
+        Layer("conv", "conv0", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("relu", "relu0", {}),
+        Layer("conv", "conv1", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("add", "add0", dict(src="conv0")),
+        Layer("relu", "relu1", {}),
+    ])
+
+
+def test_residual_add_matches_manual():
+    g = _res_graph()
+    params = g.init_params(KEY)
+    x = jax.random.normal(KEY, (2, 4, 8, 8))
+    from repro.core.ops import conv2d_ref
+    h0 = conv2d_ref(x, params["conv0"]["w"], params["conv0"]["b"],
+                    stride=1, pad=1)
+    h1 = conv2d_ref(jax.nn.relu(h0), params["conv1"]["w"],
+                    params["conv1"]["b"], stride=1, pad=1)
+    want = jax.nn.relu(h1 + h0)
+    assert_close(g.apply(params, x), want, rtol=1e-5)
+
+
+def test_residual_source_shape_validated():
+    g = Graph("bad", (4, 8, 8), [
+        Layer("conv", "conv0", dict(out_channels=8, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("conv", "conv1", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("add", "add0", dict(src="conv0")),   # 8ch + 4ch: mismatch
+    ])
+    with pytest.raises(ValueError):
+        g.shapes()
+    g2 = Graph("bad2", (4, 8, 8),
+               [Layer("add", "add0", dict(src="nonexistent"))])
+    with pytest.raises(ValueError):
+        g2.shapes()
+
+
+def test_memory_plan_chain_is_pingpong_and_residual_pins_a_slot():
+    chain = Graph("chain", (4, 8, 8), [
+        Layer("conv", "conv0", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("relu", "relu0", {}),
+        Layer("conv", "conv1", dict(out_channels=4, kernel=3, stride=1,
+                                    pad=1)),
+        Layer("relu", "relu1", {}),
+    ])
+    plan_chain = chain.memory_plan()
+    assert plan_chain["num_slots"] == 2           # classic ping-pong
+    plan_res = _res_graph().memory_plan()
+    # conv0's activation stays live until add0 -> one extra pinned slot
+    assert plan_res["num_slots"] == 3
+    assert plan_res["planned_bytes"] < plan_res["naive_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# backend selection is a per-op name lookup
+# ---------------------------------------------------------------------------
+
+
+def test_backend_name_lookup_with_fallback(tmp_path):
+    g = _res_graph()
+    params = g.init_params(KEY)
+    x = jax.random.normal(KEY, (2, 4, 8, 8))
+    ref = g.apply(params, x)
+    # "pallas" resolves per op; ops without a pallas backend (add) fall
+    # back to ref transparently
+    assert_close(g.apply(params, x, backend="pallas"), ref, rtol=1e-4)
+    # dict form selects per kind
+    y_fft = g.apply(params, x, backend={"conv": "fft", "default": "ref"})
+    assert_close(y_fft, ref, rtol=1e-3, atol=1e-3)
+    # per-layer pin via attrs wins over the global request
+    g.layers[2].attrs["backend"] = "fft"
+    assert_close(g.apply(params, x, backend="ref"), ref, rtol=1e-3,
+                 atol=1e-3)
+    del g.layers[2].attrs["backend"]
+
+
+def test_unknown_op_and_duplicate_registration_rejected():
+    with pytest.raises(KeyError):
+        REGISTRY.op("definitely-not-an-op")
+    with pytest.raises(ValueError):
+        REGISTRY.register(OpSpec(kind="conv", shape=lambda a, s: s,
+                                 backends={"ref": lambda x, p, a, c: x}))
+    with pytest.raises(ValueError):   # every op must declare a ref backend
+        REGISTRY.register(OpSpec(kind="no-ref", shape=lambda a, s: s,
+                                 backends={}))
+
+
+def test_new_op_registration_needs_no_graph_edits():
+    """A brand-new op (scale-by-constant) registered at runtime flows
+    through shapes/apply/flops/from_spec with zero Graph changes."""
+    if "scale_t" not in REGISTRY:
+        REGISTRY.register(OpSpec(
+            kind="scale_t",
+            shape=lambda a, s: s,
+            inplace=True,
+            backends={"ref": lambda x, p, a, ctx: x * a["factor"]},
+            from_block=lambda v: dict(factor=v),
+        ))
+    g = Graph.from_spec({
+        "name": "scaled", "input": (4,),
+        "blocks": [{"dense": 3}, {"scale_t": 2.0}],
+    })
+    params = g.init_params(KEY)
+    x = jnp.ones((1, 4))
+    want = 2.0 * (x @ params["dense0"]["w"] + params["dense0"]["b"])
+    assert_close(g.apply(params, x), want, rtol=1e-6)
+    assert g.memory_plan()["num_slots"] == 2      # inplace honored

@@ -1,0 +1,154 @@
+"""Continuous-batching scheduler: zero host syncs per token, per-request
+temperature, mid-flight admission, and parity with the aligned baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs.base import get_config, reduced
+from repro.runtime.scheduler import ContinuousBatchingScheduler, Request
+from repro.serving.engine import ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = models.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("max_new_cap", 16)
+    return ContinuousBatchingScheduler(cfg, params, **kw)
+
+
+def test_decode_loop_zero_host_syncs_per_token(tiny):
+    """The decode phase performs NO device->host transfer: ticks run under
+    a hard transfer guard.  The only transfers are one output-row fetch
+    per retired request, counted by the scheduler."""
+    cfg, params = tiny
+    sched = _sched(cfg, params)
+    for uid in range(2):
+        sched.submit(Request(uid=uid, prompt=[1 + uid, 2, 3],
+                             max_new_tokens=12))
+    sched.tick()          # admission tick (prefill h2d allowed)
+    assert sched.free_slots == 0
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(8):            # 8 tokens/lane, nothing retires
+            sched.tick()
+    assert sched.host_syncs == 0
+    sched.run()
+    assert sched.host_syncs == 2      # exactly one fetch per request
+    assert sched.tokens_generated == 24
+
+
+def test_per_request_temperature_honored(tiny):
+    """A greedy lane and a sampling lane share one batch: the greedy
+    lane's tokens must equal a solo greedy run, token for token."""
+    cfg, params = tiny
+    solo = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=8)
+    s1 = _sched(cfg, params)
+    s1.submit(solo)
+    s1.run()
+
+    greedy = Request(uid=1, prompt=[5, 6, 7], max_new_tokens=8,
+                     temperature=0.0)
+    hot = Request(uid=2, prompt=[9, 8, 7, 6], max_new_tokens=8,
+                  temperature=1.0)
+    s2 = _sched(cfg, params)
+    s2.submit(greedy)
+    s2.submit(hot)
+    s2.run()
+    assert greedy.output == solo.output
+    assert len(hot.output) == 8
+    assert all(0 <= t < cfg.vocab_size for t in hot.output)
+
+
+def test_sampling_is_seeded_and_varied(tiny):
+    cfg, params = tiny
+    outs = []
+    for _ in range(2):
+        r = Request(uid=0, prompt=[2, 4, 6], max_new_tokens=10,
+                    temperature=1.0)
+        s = _sched(cfg, params, seed=7)
+        s.submit(r)
+        s.run()
+        outs.append(tuple(r.output))
+    assert outs[0] == outs[1]          # same seed -> same samples
+    r2 = Request(uid=0, prompt=[2, 4, 6], max_new_tokens=10,
+                 temperature=1.0)
+    s3 = _sched(cfg, params, seed=8)
+    s3.submit(r2)
+    s3.run()
+    # 10 categorical draws over a 1024 vocab: a different seed colliding
+    # on every token is ~impossible unless seeding is broken
+    assert tuple(r2.output) != outs[0]
+
+
+def test_mid_flight_admission_does_not_disturb_running_lanes(tiny):
+    """Admit B while A is mid-decode: both must match their solo greedy
+    runs exactly (per-slot positions + per-slot cache rows)."""
+    cfg, params = tiny
+    pa, pb = [3, 1, 4, 1, 5], [2, 7, 1]
+    solo = {}
+    for name, prompt in (("a", pa), ("b", pb)):
+        r = Request(uid=0, prompt=list(prompt), max_new_tokens=10)
+        s = _sched(cfg, params)
+        s.submit(r)
+        s.run()
+        solo[name] = r.output
+
+    ra = Request(uid=1, prompt=list(pa), max_new_tokens=10)
+    rb = Request(uid=2, prompt=list(pb), max_new_tokens=10)
+    s = _sched(cfg, params)
+    s.submit(ra)
+    for _ in range(4):
+        s.tick()                      # A decodes alone for a few tokens
+    s.submit(rb)                      # B admitted mid-flight
+    s.run()
+    assert ra.output == solo["a"]
+    assert rb.output == solo["b"]
+
+
+def test_more_requests_than_slots_queue_and_retire(tiny):
+    cfg, params = tiny
+    sched = _sched(cfg, params)       # 2 slots
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=4 + i)
+            for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    for i, r in enumerate(reqs):
+        assert r.done and len(r.output) == 4 + i
+    assert sched.host_syncs == 5
+    assert sched.tokens_generated == sum(4 + i for i in range(5))
+
+
+def test_scheduler_matches_aligned_greedy_baseline(tiny):
+    """Equal-length greedy batch: continuous scheduler == legacy aligned
+    loop, token for token."""
+    cfg, params = tiny
+    prompts = [[1, 2, 3, 4], [9, 8, 7, 6]]
+    eng = ServingEngine(cfg, params, max_batch=2, cache_len=64)
+    aligned = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+               for i, p in enumerate(prompts)]
+    eng.generate_aligned(aligned)
+
+    cont = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    stats = eng.generate_batch(cont)
+    assert [r.output for r in cont] == [r.output for r in aligned]
+    assert stats.tokens_out == 12
+    assert stats.decode_s > 0 and stats.prefill_s > 0
+
+
+def test_request_exceeding_cap_rejected(tiny):
+    cfg, params = tiny
+    sched = _sched(cfg, params, max_new_cap=8)
+    with pytest.raises(ValueError):
+        sched.submit(Request(uid=0, prompt=[1], max_new_tokens=9))

@@ -1,22 +1,31 @@
 """Serving-path benchmark: continuous batching vs the aligned baseline +
 the 100 ms Nielsen response-time budget the paper invokes (sec 1.1).
 
-Three measurements on the reduced tinyllama config (the point is the
+Measurements on the reduced tinyllama config (the point is the
 *framework* measurement; full-config numbers come from the dry-run
 roofline):
 
-  1. steady-state: the same aligned greedy batch through the legacy
-     aligned loop (one host sync per token) and through the continuous
-     scheduler (device-side sampling, zero syncs) — the scheduler must
-     at least match the old path here,
+  1. steady-state at b=1/4/8, three decode paths:
+       aligned    — legacy aligned loop, one host sync per token,
+       continuous — the scheduler with the vmapped B=1 decode_step
+                    (the pre-PR-2 dense reference),
+       batched    — the scheduler's default lane-major decode_step_batch
+                    (one fused ragged-attention call across all lanes,
+                    backend resolved through the op registry),
   2. mid-flight admission: mixed prompt lengths, staggered arrivals,
      mixed generation lengths — the workload the aligned loop cannot
      express — reported as tokens/s,
   3. per-token latency vs the Nielsen instant-response budget.
+
+Every number lands in ``BENCH_serving.json`` (cwd) so the perf
+trajectory stays machine-readable across PRs; CI uploads the file as a
+workflow artifact.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 
 import numpy as np
 
@@ -28,6 +37,8 @@ from repro.configs.base import get_config, reduced
 from repro.runtime.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import ServingEngine
 
+OUT_PATH = os.environ.get("REPRO_BENCH_SERVING_JSON", "BENCH_serving.json")
+
 
 def _requests(rng, n, *, plen=16, max_new=32, fixed_plen=True, temp=0.0):
     out = []
@@ -38,44 +49,68 @@ def _requests(rng, n, *, plen=16, max_new=32, fixed_plen=True, temp=0.0):
     return out
 
 
+def _best(runs):
+    """Best-of-N tok/s: single ~150ms windows jitter +/-40% on a shared
+    host, so each path keeps its best repeat (noisy-host practice)."""
+    return max(runs, key=lambda st: st.tok_per_s)
+
+
+def _warm_and_measure(eng, batch, max_new, rng, repeats):
+    """Warmup compiles at the measured shapes, then best-of-N timed runs."""
+    eng.generate_batch([Request(uid=800 + i, prompt=[1] * 16,
+                                max_new_tokens=max_new)
+                        for i in range(batch)])
+    return _best([eng.generate_batch(_requests(rng, batch, max_new=max_new))
+                  for _ in range(repeats)])
+
+
 def main():
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
-    print("== bench_serving: continuous batching vs aligned baseline ==")
+    print("== bench_serving: aligned vs continuous(vmapped) vs batched ==")
     cfg = reduced(get_config("tinyllama-1.1b"))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     batches = (1, 4) if smoke else (1, 4, 8)
     max_new = 16 if smoke else 32
+    repeats = 1 if smoke else 3
     out = {}
 
     for batch in batches:
-        eng = ServingEngine(cfg, params, max_batch=batch, cache_len=128)
+        eng_v = ServingEngine(cfg, params, max_batch=batch, cache_len=128,
+                              decode_mode="vmapped")
+        eng_b = ServingEngine(cfg, params, max_batch=batch, cache_len=128,
+                              decode_mode="batched")
         rng = np.random.default_rng(0)
-        # warmup compiles for both paths at the MEASURED shapes (batch
-        # size, prompt length, and max_new cap), so no XLA compile lands
-        # in the timed region
-        eng.generate_aligned([Request(uid=900 + i, prompt=[1] * 16,
-                                      max_new_tokens=max_new)
-                              for i in range(batch)])
-        eng.generate_batch([Request(uid=800 + i, prompt=[1] * 16,
-                                    max_new_tokens=max_new)
-                            for i in range(batch)])
-
-        al = eng.generate_aligned(_requests(rng, batch, max_new=max_new))
-        co = eng.generate_batch(_requests(rng, batch, max_new=max_new))
-        speedup = co.tok_per_s / max(al.tok_per_s, 1e-9)
+        # aligned warmup + measure (legacy loop lives on either engine)
+        eng_v.generate_aligned([Request(uid=900 + i, prompt=[1] * 16,
+                                        max_new_tokens=max_new)
+                                for i in range(batch)])
+        al = _best([eng_v.generate_aligned(
+            _requests(rng, batch, max_new=max_new)) for _ in range(repeats)])
+        co = _warm_and_measure(eng_v, batch, max_new, rng, repeats)
+        bt = _warm_and_measure(eng_b, batch, max_new, rng, repeats)
         row(f"aligned    batch={batch}", f"{al.tok_per_s:8.1f}", "tok/s",
             f"decode {al.decode_s*1e3:.0f}ms (1 host sync/token)")
         row(f"continuous batch={batch}", f"{co.tok_per_s:8.1f}", "tok/s",
-            f"decode {co.decode_s*1e3:.0f}ms (0 host syncs/token) "
-            f"{speedup:4.2f}x")
+            f"decode {co.decode_s*1e3:.0f}ms (vmapped B=1 reference) "
+            f"{co.tok_per_s/max(al.tok_per_s,1e-9):4.2f}x")
+        row(f"batched    batch={batch}", f"{bt.tok_per_s:8.1f}", "tok/s",
+            f"decode {bt.decode_s*1e3:.0f}ms (lane-major ragged) "
+            f"{bt.tok_per_s/max(al.tok_per_s,1e-9):4.2f}x")
         out[f"aligned_b{batch}"] = al.tok_per_s
         out[f"continuous_b{batch}"] = co.tok_per_s
+        out[f"batched_b{batch}"] = bt.tok_per_s
 
     big = batches[-1]
     steady_ok = out[f"continuous_b{big}"] >= 0.9 * out[f"aligned_b{big}"]
     row("steady-state parity", "PASS" if steady_ok else "FAIL",
         "", f"continuous >= 0.9x aligned at batch={big} "
-        f"(measured {out[f'continuous_b{big}']/max(out[f'aligned_b{big}'],1e-9):.2f}x)")
+        f"(measured "
+        f"{out[f'continuous_b{big}']/max(out[f'aligned_b{big}'],1e-9):.2f}x)")
+    kernel_ratio = out[f"batched_b{big}"] / max(out[f"continuous_b{big}"],
+                                                1e-9)
+    row("batched vs vmapped", "PASS" if kernel_ratio >= 1.0 else "FAIL",
+        "", f"batched >= vmapped dense at batch={big} "
+        f"(measured {kernel_ratio:.2f}x)")
 
     # -- mid-flight admission: the workload the aligned loop can't run ----
     n_req = 6 if smoke else 16
@@ -117,12 +152,29 @@ def main():
     row("host syncs", f"{sched.host_syncs}",
         "", f"= retired requests ({n_req}); 0 per token")
 
-    per_tok_ms = 1e3 / max(out["continuous_b1"], 1e-9)
+    per_tok_ms = 1e3 / max(out["batched_b1"], 1e-9)
     row("per-token latency b=1", f"{per_tok_ms:.1f}", "ms",
         "Nielsen instant-response budget = 100ms")
     row("fits 100ms/token budget", "PASS" if per_tok_ms < 100 else "FAIL")
     print()
     out["midflight"] = sched.tokens_generated / max(busy, 1e-9)
+
+    payload = {
+        "benchmark": "serving",
+        "config": cfg.name + " (reduced)",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "batches": list(batches),
+        "max_new": max_new,
+        "tokens_per_s": {k: round(v, 2) for k, v in out.items()},
+        "batched_vs_vmapped_at_max_batch": round(kernel_ratio, 3),
+        "per_token_latency_ms_b1": round(per_tok_ms, 2),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench_serving] wrote {OUT_PATH}")
     return out
 
 

@@ -439,3 +439,41 @@ REGISTRY.register(OpSpec(
     to_caffe=_add_to_caffe, from_caffe=_add_from_caffe,
     from_block=lambda v: dict(src=v),
 ))
+
+
+# ---------------------------------------------------------------------------
+# Serving hot-path ops: not graph layers, but the same named-backend
+# mechanism — call sites resolve `ref` (pure-jnp oracle) vs `pallas`
+# (on-chip kernel) by name instead of threading booleans.
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_ref_b(q, k_cache, v_cache, valid_len, *, layout="bksd",
+                       interpret=None):
+    """q: (B, 1, H, D) against a ring cache; valid_len scalar or (B,)."""
+    del interpret
+    from repro.models.common import attention_decode
+    return attention_decode(q, k_cache, v_cache, valid_len, layout=layout)
+
+
+def _decode_attn_pallas_b(q, k_cache, v_cache, valid_len, *, layout="bksd",
+                          interpret=None):
+    from repro.kernels import ops as kops
+    out = kops.decode_attention(q[:, 0], k_cache, v_cache, valid_len,
+                                layout=layout, interpret=interpret)
+    return out[:, None].astype(q.dtype)
+
+
+def resolve_decode_backend(name: Optional[str]) -> str:
+    """``None``/'auto' -> 'pallas' on TPU (Mosaic kernel), 'ref' elsewhere
+    (the interpret-mode kernel would only emulate the block skipping)."""
+    if name in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return name
+
+
+REGISTRY.register(OpSpec(
+    kind="decode_attention",
+    shape=lambda a, s: s,
+    backends={"ref": _decode_attn_ref_b, "pallas": _decode_attn_pallas_b},
+))

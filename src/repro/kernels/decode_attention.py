@@ -1,11 +1,29 @@
-"""Flash-decode: one-token attention against a long KV cache.
+"""Flash-decode: one-token attention against long (possibly ragged) KV caches.
 
-Beyond-paper kernel for the decode_32k / long_500k shapes: the KV cache is
-streamed through VMEM in blocks along the sequence (grid-innermost, so
-sequential with scratch carry), with online softmax over the valid prefix.
-GQA is handled by processing all G query heads of one KV head together —
-the (G, D) query tile rides along the whole stream, maximizing cache-byte
+Beyond-paper kernel for the decode_32k / long_500k shapes AND the
+continuous-batching serving hot path: the KV cache is streamed through
+VMEM in blocks along the sequence (grid-innermost, so sequential with
+scratch carry), with online softmax over the valid prefix.  GQA is
+handled by processing all G query heads of one KV head together — the
+(G, D) query tile rides along the whole stream, maximizing cache-byte
 reuse (the decode bottleneck is HBM bandwidth on cache reads).
+
+Ragged batching (PR 2): ``valid_len`` may be a per-lane ``(B,)`` vector,
+so one kernel launch serves a continuous-batching step where every lane
+sits at a different position in its ring cache.  Two mechanisms keep the
+cost proportional to each lane's actual prefix instead of ``B x S``:
+
+  * the valid vector rides in as a *scalar-prefetch* operand
+    (``PrefetchScalarGridSpec``), so the K/V BlockSpec index maps can
+    clamp the sequence index to the lane's last useful block — revisiting
+    the same block index makes the pipeline skip the HBM->VMEM copy
+    entirely for blocks beyond the prefix;
+  * the flash update is wrapped in ``@pl.when(si * bs < valid)`` so the
+    skipped blocks also cost no MXU flops (block-level early exit).
+
+Layouts: ``bskd`` (k/v ``(B, S, KV, D)`` — the historical kernel-bench
+layout) and ``bksd`` (``(B, KV, S, D)`` — the serving ring-cache layout,
+consumed without any transpose).
 """
 from __future__ import annotations
 
@@ -21,7 +39,8 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale, bs, ns):
+                   m_ref, l_ref, acc_ref, *, scale, bs, ns, kv_major):
+    bi = pl.program_id(0)
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -30,20 +49,31 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G,bs)
-    spos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(spos < valid_ref[0], s, NEG_INF)
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    lane_valid = valid_ref[bi]
+
+    # block-level early exit: blocks entirely beyond this lane's valid
+    # prefix contribute nothing — skip the whole flash update (the index
+    # maps below also pin their DMA to the last useful block)
+    @pl.when(si * bs < lane_valid)
+    def _flash_update():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        if kv_major:                                   # bksd block (1,1,bs,D)
+            k = k_ref[0, 0].astype(jnp.float32)        # (bs, D)
+            v = v_ref[0, 0].astype(jnp.float32)
+        else:                                          # bskd block (1,bs,1,D)
+            k = k_ref[0, :, 0].astype(jnp.float32)
+            v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        spos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(spos < lane_valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(si == ns - 1)
     def _done():
@@ -51,38 +81,68 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, valid_len, *, block_s: int = 512,
-                     interpret: bool = False):
-    """q: (B, H, D); k, v: (B, S, KV, D); valid_len: scalar int32."""
+def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
+                     block_s: int = 512, interpret: bool = False):
+    """q: (B, H, D); k, v: (B, S, KV, D) for ``layout='bskd'`` or
+    (B, KV, S, D) for ``layout='bksd'``; valid_len: scalar int32 or a
+    per-lane (B,) vector (each entry >= 1 — the number of valid ring
+    slots, counted from slot 0)."""
     b, h, d = q.shape
-    s, kvh = k.shape[1], k.shape[2]
+    if layout == "bskd":
+        s, kvh, seq_axis = k.shape[1], k.shape[2], 1
+    else:
+        assert layout == "bksd", layout
+        kvh, s, seq_axis = k.shape[1], k.shape[2], 2
     g = h // kvh
     bs = min(block_s, s)
     pad = (-s) % bs
     if pad:
-        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zp = [(0, 0)] * 4
+        zp[seq_axis] = (0, pad)
         k, v = jnp.pad(k, zp), jnp.pad(v, zp)
     ns = (s + pad) // bs
     scale = 1.0 / math.sqrt(d)
     qg = q.reshape(b, kvh, g, d)
-    valid = jnp.full((1,), valid_len, jnp.int32)
+    valid = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+
+    # clamp the seq block index to each lane's last useful block: the
+    # pipeline skips the copy when the index does not change, so blocks
+    # beyond the prefix cost no HBM reads
+    def _clamp(si, valid_ref, bi):
+        last = jnp.maximum(pl.cdiv(valid_ref[bi], bs) - 1, 0)
+        return jnp.minimum(si, last)
+
+    if layout == "bskd":
+        kv_spec = pl.BlockSpec(
+            (1, bs, 1, d),
+            lambda bi, ki, si, vr: (bi, _clamp(si, vr, bi), ki, 0))
+    else:
+        kv_spec = pl.BlockSpec(
+            (1, 1, bs, d),
+            lambda bi, ki, si, vr: (bi, ki, _clamp(si, vr, bi), 0))
 
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns),
-        grid=(b, kvh, ns),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+        functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns,
+                          kv_major=(layout == "bksd")),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kvh, ns),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bi, ki, si, vr: (bi, ki, 0, 0)),
+                kv_spec,
+                kv_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, ki, si, vr: (bi, ki, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
         interpret=interpret,
     )(valid, qg, k, v)
     return out.reshape(b, h, d)

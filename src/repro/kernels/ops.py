@@ -92,9 +92,12 @@ def flash_attention_trainable(q, k, v, *, causal=True, window=0,
         q, k, v, causal, window, block_q, block_k, _interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def decode_attention(q, k, v, valid_len, *, block_s=512, interpret=None):
-    return _da.decode_attention(q, k, v, valid_len, block_s=block_s,
+@functools.partial(jax.jit, static_argnames=("layout", "block_s",
+                                             "interpret"))
+def decode_attention(q, k, v, valid_len, *, layout="bskd", block_s=512,
+                     interpret=None):
+    return _da.decode_attention(q, k, v, valid_len, layout=layout,
+                                block_s=block_s,
                                 interpret=_interpret(interpret))
 
 

@@ -47,16 +47,24 @@ def int8_matmul_ref(a_q, b_q, a_scale, b_scale):
     return acc.astype(jnp.float32) * a_scale[:, None] * b_scale[None, :]
 
 
-def decode_attention_ref(q, k, v, valid_len):
-    """q: (B, H, D); k, v: (B, S, KV, D); valid_len scalar int."""
+def decode_attention_ref(q, k, v, valid_len, *, layout="bskd"):
+    """q: (B, H, D); k, v: (B, S, KV, D) ('bskd') or (B, KV, S, D)
+    ('bksd'); valid_len: scalar int or per-lane (B,) vector."""
     b, h, d = q.shape
+    if layout == "bksd":
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
     s, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, kvh, g, d)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(d)
-    valid = jnp.arange(s) < valid_len
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    valid = jnp.asarray(valid_len)
+    if valid.ndim == 0:
+        mask = (jnp.arange(s) < valid)[None, None, None]
+    else:
+        mask = (jnp.arange(s)[None, :] < valid[:, None])[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)

@@ -276,9 +276,11 @@ def attention_decode(q, k_cache, v_cache, valid_len, layout="bskd"):
 
     q: (B, 1, H, D); caches: (B, S, KV, D) for layout='bskd' (encdec
     legacy) or (B, KV, S, D) for layout='bksd' (decoder-only canonical);
-    valid_len: scalar number of valid cache slots (== S once the ring is
-    full).  The bksd layout makes both decode dots batch-major (b, kv
-    leading), so XLA inserts NO cache-slice transpose (§Perf h3 it3).
+    valid_len: number of valid cache slots (== S once the ring is full) —
+    a scalar, or a per-lane (B,) vector for the ragged lane-major batch
+    where every lane sits at a different prefix length.  The bksd layout
+    makes both decode dots batch-major (b, kv leading), so XLA inserts NO
+    cache-slice transpose (§Perf h3 it3).
 
     The caches are consumed in their storage dtype (bf16) with fp32
     ACCUMULATION (preferred_element_type) — materializing an fp32 copy of
@@ -298,8 +300,12 @@ def attention_decode(q, k_cache, v_cache, valid_len, layout="bskd"):
     qg = q[:, 0].reshape(b, kvh, groups, d)
     scores = jnp.einsum(eq_s, qg.astype(k_cache.dtype), k_cache,
                         preferred_element_type=jnp.float32) / math.sqrt(d)
-    valid = jnp.arange(s) < valid_len
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid_len = jnp.asarray(valid_len)
+    if valid_len.ndim == 0:
+        valid = (jnp.arange(s) < valid_len)[None, None, None, :]
+    else:                       # ragged: per-lane (B,) valid prefix
+        valid = (jnp.arange(s)[None, :] < valid_len[:, None])[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(eq_o, probs.astype(k_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)
@@ -322,8 +328,50 @@ def cache_write(cache_k, cache_v, k_new, v_new, pos, seq_axis: int = 1):
     return cache_k, cache_v
 
 
+def cache_write_batch(cache_k, cache_v, k_new, v_new, pos, seq_axis: int = 2):
+    """Per-lane ring write for the lane-major batched decode step.
+
+    ``pos`` is a (B,) vector of absolute positions; lane b's token lands
+    at ring slot ``pos[b] % S``.  ``k_new``/``v_new``: (B, KV, 1, D) for
+    ``seq_axis=2`` (bksd caches) or (B, 1, KV, D) for ``seq_axis=1``
+    (bskd caches).
+    """
+    s = cache_k.shape[seq_axis]
+    idx = jnp.mod(pos, s)
+    rows = jnp.arange(cache_k.shape[0])
+    if seq_axis == 2:
+        cache_k = cache_k.at[rows, :, idx].set(
+            k_new[:, :, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, :, idx].set(
+            v_new[:, :, 0].astype(cache_v.dtype))
+    else:
+        assert seq_axis == 1, seq_axis
+        cache_k = cache_k.at[rows, idx].set(
+            k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, idx].set(
+            v_new[:, 0].astype(cache_v.dtype))
+    return cache_k, cache_v
+
+
 def cache_valid_len(pos, cache_size):
     return jnp.minimum(pos + 1, cache_size)
+
+
+def decode_attention_named(q, k_cache, v_cache, valid_len, *,
+                           layout: str = "bksd",
+                           backend: Optional[str] = None):
+    """Decode attention through the op-registry named-backend mechanism.
+
+    ``backend`` is a registry backend name — 'ref' (the jnp
+    :func:`attention_decode` oracle), 'pallas' (the ragged flash-decode
+    kernel in repro.kernels.decode_attention), or None/'auto' (pallas on
+    TPU, ref elsewhere).  Same resolution path as the graph ops: adding a
+    new decode implementation is one ``REGISTRY.register_backend`` call.
+    """
+    from repro.core.ops import REGISTRY, resolve_decode_backend
+    fn = REGISTRY.op("decode_attention").backend(
+        resolve_decode_backend(backend))
+    return fn(q, k_cache, v_cache, valid_len, layout=layout)
 
 
 # ---------------------------------------------------------------------------

@@ -211,11 +211,51 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
     return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
 
 
+def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
+                      window: int = 0, attn_backend=None):
+    """Lane-major decode: token (B, 1); pos (B,) per-lane positions.
+    Self-attention goes through the ragged named-backend decode path
+    (per-lane RoPE + ring writes, bskd cache layout); cross-attention
+    keys are the full encoder output, identical for every lane."""
+    x = params["embed"][token]                         # (B,1,d)
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+
+    def layer(x, scanned):
+        lp, ck, cv, xk, xv = scanned
+        xn = _ln(x, lp, "ln")
+        q, k, v = _qkv(cfg, lp, xn, xn)
+        posv = pos[:, None]
+        q = cm.apply_rope(q, posv, cfg.rope_theta)
+        k = cm.apply_rope(k, posv, cfg.rope_theta)
+        ck, cv = cm.cache_write_batch(ck, cv, k, v, pos, seq_axis=1)
+        valid = cm.cache_valid_len(pos, ck.shape[1])
+        a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
+                                      backend=attn_backend)
+        x = x + (a.reshape(b, 1, cfg.q_dim) @ lp["wo"] + lp["bo"])
+        xn = _ln(x, lp, "x_ln")
+        qx = (xn @ lp["x_wq"] + lp["x_bq"]).reshape(b, 1, cfg.num_heads, hd)
+        ax = cm.attention_decode(qx, xk, xv, xk.shape[1])
+        x = x + (ax.reshape(b, 1, cfg.q_dim) @ lp["x_wo"] + lp["x_bo"])
+        x = x + _mlp(cfg, lp, x)
+        return x, (ck, cv)
+
+    x, (ck, cv) = lax.scan(
+        layer, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                   cache["xv"]))
+    x = cm.layer_norm(x, params["final_ln_w"], params["final_ln_b"])
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+
+
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, frames=None, *,
             window: int = 0, cache_dtype=jnp.bfloat16):
     b, s = tokens.shape
     if frames is None:
-        frames = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        # match the compute dtype or the encoder scan carry flips types
+        # (f32 serving params + bf16 frames broke the decode-only path)
+        frames = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
+                           params["embed"].dtype)
     enc_out = encode(cfg, params, frames)
     x = params["embed"][tokens]
 

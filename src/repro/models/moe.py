@@ -330,6 +330,27 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
     return tfm._logits(cfg, params, x), {"k": ck, "v": cv}
 
 
+def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
+                      window: int = 0, attn_backend=None):
+    """Lane-major decode: tokens (B, 1); pos (B,) per-lane (see
+    transformer.decode_step_batch).  The MoE block routes all B lane
+    tokens through one dispatch instead of B single-token dispatches."""
+    x = tfm._embed(cfg, params, tokens)
+
+    def layer(x, scanned):
+        lp, ck, cv = scanned
+        a, ck, cv = tfm.attn_decode_batch(cfg, lp, x, ck, cv, pos,
+                                          window=window,
+                                          backend=attn_backend)
+        x = x + a
+        m, _ = _moe_block(cfg, lp, x)
+        return x + m, (ck, cv)
+
+    x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k"],
+                                      cache["v"]))
+    return tfm._logits(cfg, params, x), {"k": ck, "v": cv}
+
+
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
             window: int = 0, cache_dtype=jnp.bfloat16):
     b, s = tokens.shape

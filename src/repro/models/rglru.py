@@ -271,6 +271,45 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
     return logits, new_cache
 
 
+def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
+                      window: int = 0, attn_backend=None):
+    """Lane-major decode: token (B, 1); pos (B,) per-lane.  Recurrent
+    blocks are already batched; the local-attention layers switch to the
+    fused ragged decode attention (per-lane RoPE positions + ring
+    writes)."""
+    del window
+    x = params["embed"][token[:, 0]]
+    kinds = layer_kinds(cfg)
+    hs, convs, ks, vs = [], [], [], []
+    ri = ai = 0
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            lp = _slice(params["rec"], ri)
+            a, cst, hst = rec_block_step(
+                cfg, lp, x, cache["conv"][ri], cache["h"][ri])
+            convs.append(cst)
+            hs.append(hst)
+            ri += 1
+            x = x + a
+        else:
+            lp = _slice(params["attn"], ai)
+            a, ck, cv = tfm.attn_decode_batch(
+                cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai], pos,
+                window=cfg.local_window, backend=attn_backend)
+            ks.append(ck)
+            vs.append(cv)
+            ai += 1
+            x = x + a[:, 0]
+        x = x + tfm.mlp(cfg, _slice(params["mlp"], li), x[:, None])[:, 0]
+    x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["unembed"])[:, None]
+    new_cache = {
+        "h": jnp.stack(hs), "conv": jnp.stack(convs),
+        "k": jnp.stack(ks), "v": jnp.stack(vs),
+    }
+    return logits, new_cache
+
+
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
             window: int = 0, cache_dtype=jnp.bfloat16):
     b, s = tokens.shape

@@ -323,6 +323,17 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
                     "shift_cm": scm.astype(cache["shift_cm"].dtype)}
 
 
+def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
+                      window: int = 0, attn_backend=None):
+    """Lane-major decode for the scheduler's batched path.  The RWKV
+    recurrence is position-free and :func:`decode_step` is already fully
+    batched over lanes, so the per-lane ``pos`` vector is simply
+    dropped."""
+    del pos, attn_backend
+    return decode_step(cfg, params, tokens, cache, jnp.int32(0),
+                       window=window)
+
+
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
             window: int = 0, cache_dtype=jnp.bfloat16):
     b, t = tokens.shape

@@ -122,6 +122,37 @@ def attn_decode(cfg: ArchConfig, lp, x, ck, cv, pos, *, window: int = 0):
     return out @ lp["wo"], ck, cv
 
 
+def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
+                      window: int = 0, backend=None):
+    """Lane-major ragged decode attention: x (B, 1, d); caches
+    (B, KV, S, D); pos (B,) per-lane absolute positions.
+
+    The batched analogue of :func:`attn_decode` — one QKV projection and
+    ONE fused attention call across all lanes (ragged valid vector)
+    instead of vmapping B=1 steps.  ``backend`` selects the registry
+    implementation ('ref' | 'pallas' | None=auto)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    cache_size = ck.shape[2]
+    xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    k = (xn @ lp["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = (xn @ lp["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = cm.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    posv = pos[:, None]                                # (B, 1) per-lane
+    q = cm.apply_rope(q, posv, cfg.rope_theta)
+    k = cm.apply_rope(k, posv, cfg.rope_theta)
+    ck, cv = cm.cache_write_batch(ck, cv, k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), pos, seq_axis=2)
+    valid = cm.cache_valid_len(pos, cache_size)        # (B,) ragged
+    out = cm.decode_attention_named(q, ck, cv, valid, layout="bksd",
+                                    backend=backend)
+    out = out.reshape(b, 1, cfg.q_dim)
+    return out @ lp["wo"], ck, cv
+
+
 def mlp(cfg: ArchConfig, lp, x):
     xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
     return cm.swiglu(xn, lp["w_gate"], lp["w_up"], lp["w_down"])
@@ -201,6 +232,30 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
     def layer(x, scanned):
         lp, ck, cv = scanned
         a, ck, cv = attn_decode(cfg, lp, x, ck, cv, pos, window=window)
+        x = x + a
+        x = x + mlp(cfg, lp, x)
+        return x, (ck, cv)
+
+    x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k"],
+                                      cache["v"]))
+    return _logits(cfg, params, x), {"k": ck, "v": cv}
+
+
+def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
+                      window: int = 0, attn_backend=None):
+    """Lane-major decode: tokens (B, 1) int32; pos (B,) int32 per-lane.
+
+    The continuous-batching hot path: batched QKV projections, per-lane
+    RoPE positions and ring writes, and one fused ragged attention call
+    per layer — instead of vmapping B=1 :func:`decode_step` over lanes.
+    Returns (logits (B, 1, V), cache), numerically matching the vmapped
+    reference path."""
+    x = _embed(cfg, params, tokens)
+
+    def layer(x, scanned):
+        lp, ck, cv = scanned
+        a, ck, cv = attn_decode_batch(cfg, lp, x, ck, cv, pos,
+                                      window=window, backend=attn_backend)
         x = x + a
         x = x + mlp(cfg, lp, x)
         return x, (ck, cv)

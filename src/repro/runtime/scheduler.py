@@ -22,10 +22,19 @@ request happens at retirement when its output row is fetched.
 Requests are admitted mid-flight: a free slot prefill-computes the
 prompt (B=1), samples the first token, and splices cache row + state
 into the live batch while the other lanes keep decoding.  Per-slot
-positions make this correct under rotary embeddings and ring caches —
-the decode step is the family module's own ``decode_step`` vmapped over
-lanes (cache batch axis 1), so every model family (dense, MoE, RWKV,
-RG-LRU) gets continuous batching for free.
+positions make this correct under rotary embeddings and ring caches.
+
+The decode step itself is lane-major by default
+(``decode_mode='batched'``): the family module's ``decode_step_batch``
+takes the whole (B, 1) token batch and the per-lane position vector,
+does batched QKV projections and ONE fused ragged-attention call across
+all lanes — with the attention implementation resolved by name through
+the op registry (``ref`` = jnp oracle, ``pallas`` = the flash-decode
+kernel with per-lane block early exit).  The pre-PR-2 path — the B=1
+``decode_step`` vmapped over lanes (cache batch axis 1) — survives as
+``decode_mode='vmapped'``, the correctness reference the batched path
+must match token-for-token; families without a batch step fall back to
+it automatically.
 
 Prompt-length bucketing (``prefill_buckets``) bounds XLA compiles to a
 few prompt shapes by LEFT-padding each prompt up to its bucket.  The
@@ -84,7 +93,9 @@ class ContinuousBatchingScheduler:
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 8,
                  cache_len: int = 256, max_new_cap: int = 64,
                  pad_id: int = 0, seed: int = 0,
-                 prefill_buckets: Optional[List[int]] = None):
+                 prefill_buckets: Optional[List[int]] = None,
+                 decode_mode: str = "batched",
+                 attn_backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -94,6 +105,28 @@ class ContinuousBatchingScheduler:
         self.pad_id = pad_id
         self.prefill_buckets = sorted(prefill_buckets) if prefill_buckets \
             else None
+        # 'batched' (default): the family's lane-major decode_step_batch —
+        # one fused ragged-attention call across all lanes.  'vmapped':
+        # the B=1 decode_step vmapped over lanes, kept as the correctness
+        # reference the batched path must match token-for-token.
+        if decode_mode not in ("batched", "vmapped"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if decode_mode == "batched" and \
+                not hasattr(self.mod, "decode_step_batch"):
+            decode_mode = "vmapped"
+        self.decode_mode = decode_mode
+        # registry name (ref|pallas|auto); the registry's backend() falls
+        # back to 'ref' silently, so reject typos here where the intent
+        # is explicit — a misspelled 'pallas' must not benchmark 'ref'
+        if attn_backend is not None:
+            from repro.core.ops import REGISTRY, resolve_decode_backend
+            resolved = resolve_decode_backend(attn_backend)
+            known = REGISTRY.op("decode_attention").backends
+            if resolved not in known:
+                raise ValueError(
+                    f"unknown attn_backend {attn_backend!r} "
+                    f"(known: {sorted(known)} or 'auto')")
+        self.attn_backend = attn_backend
         self.pending: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self._steps_left = np.zeros(max_slots, np.int64)
@@ -133,8 +166,19 @@ class ContinuousBatchingScheduler:
                         out_axes=(0, 1))(params, tokens[:, None, :],
                                          cache, pos)
 
+    def _decode_lanes(self, params, tokens, cache, pos):
+        """One decode step for every lane: the lane-major batched path
+        (default) or the vmapped B=1 reference."""
+        if self.decode_mode == "batched":
+            lg, cache = self.mod.decode_step_batch(
+                self.cfg, params, tokens, cache, pos,
+                attn_backend=self.attn_backend)
+            return lg.reshape(self.max_slots, -1,
+                              self.cfg.vocab_size)[:, -1], cache
+        return self._decode_slots(params, tokens, cache, pos)
+
     def _step(self, params, state):
-        last, cache = self._decode_slots(params, state["tokens"],
+        last, cache = self._decode_lanes(params, state["tokens"],
                                          state["cache"], state["pos"])
         key, sub = jax.random.split(state["key"])
         nxt = _sample(sub, last, state["temp"])
@@ -192,6 +236,13 @@ class ContinuousBatchingScheduler:
                 f"request {request.uid}: max_new_tokens="
                 f"{request.max_new_tokens} exceeds scheduler cap "
                 f"{self.max_new_cap}")
+        plen = self._bucket(len(request.prompt))
+        if plen > self.cache_len:
+            raise ValueError(
+                f"request {request.uid}: prompt length "
+                f"{len(request.prompt)} (padded to {plen} by the prefill "
+                f"bucket) exceeds cache_len={self.cache_len} — the ring "
+                f"cache would wrap during prefill and corrupt the prefix")
         self.pending.append(request)
 
     def _bucket(self, plen: int) -> int:

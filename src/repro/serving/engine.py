@@ -62,7 +62,9 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  cache_len: int = 256, pad_id: int = 0, seed: int = 0,
-                 prefill_buckets: Optional[List[int]] = None):
+                 prefill_buckets: Optional[List[int]] = None,
+                 decode_mode: str = "batched",
+                 attn_backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -71,6 +73,8 @@ class ServingEngine:
         self.pad_id = pad_id
         self.seed = seed
         self.prefill_buckets = prefill_buckets
+        self.decode_mode = decode_mode
+        self.attn_backend = attn_backend
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -103,7 +107,9 @@ class ServingEngine:
                 self.cfg, self.params, max_slots=self.max_batch,
                 cache_len=self.cache_len, max_new_cap=cap,
                 pad_id=self.pad_id, seed=self.seed,
-                prefill_buckets=self.prefill_buckets)
+                prefill_buckets=self.prefill_buckets,
+                decode_mode=self.decode_mode,
+                attn_backend=self.attn_backend)
             self._sched.pending.extend(pending)
         return self._sched
 

@@ -237,6 +237,64 @@ def test_decode_attention_masks_invalid_slots():
     np.testing.assert_allclose(out1, out2, rtol=1e-5)
 
 
+@pytest.mark.parametrize("layout", ["bskd", "bksd"])
+@pytest.mark.parametrize("s,h,kv,d,block", [(256, 8, 4, 64, 64),
+                                            (128, 4, 1, 32, 128),
+                                            (192, 16, 16, 32, 64)])
+def test_decode_attention_ragged(layout, s, h, kv, d, block):
+    """Per-lane (B,) valid_len vector — the continuous-batching shape —
+    across GQA group counts, both cache layouts, and block counts that
+    force the @pl.when early-exit path (valid not a block multiple)."""
+    b = 4
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    shape = (b, s, kv, d) if layout == "bskd" else (b, kv, s, d)
+    k = rand(shape, key=ks[1])
+    v = rand(shape, key=ks[2])
+    valid = jnp.array([1, s // 3, s // 2 + 1, s], jnp.int32)
+    assert_close(
+        ops.decode_attention(q, k, v, valid, layout=layout, block_s=block),
+        ref.decode_attention_ref(q, k, v, valid, layout=layout),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_ragged_matches_per_lane_scalar():
+    """Lane i of one ragged launch == a solo scalar-valid launch for
+    lane i (the batched path must not couple lanes)."""
+    b, s, h, kv, d = 3, 128, 8, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    k = rand((b, kv, s, d), key=ks[1])
+    v = rand((b, kv, s, d), key=ks[2])
+    valid = jnp.array([17, 64, 128], jnp.int32)
+    ragged = np.asarray(ops.decode_attention(q, k, v, valid, layout="bksd",
+                                             block_s=32))
+    for i in range(b):
+        solo = np.asarray(ops.decode_attention(
+            q[i:i + 1], k[i:i + 1], v[i:i + 1], jnp.int32(int(valid[i])),
+            layout="bksd", block_s=32))
+        np.testing.assert_allclose(ragged[i:i + 1], solo, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_decode_attention_ragged_masks_per_lane():
+    """Ring-cache semantics: slots past EACH lane's own valid prefix hold
+    stale data that must not leak into that lane's output."""
+    b, s, h, kv, d = 3, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    k = rand((b, kv, s, d), key=ks[1])
+    v = rand((b, kv, s, d), key=ks[2])
+    valid = jnp.array([32, 64, 128], jnp.int32)
+    out1 = np.asarray(ops.decode_attention(q, k, v, valid, layout="bksd",
+                                           block_s=32))
+    k2 = k.at[0, :, 32:].set(99.0).at[1, :, 64:].set(-99.0)
+    v2 = v.at[0, :, 32:].set(-99.0).at[1, :, 64:].set(99.0)
+    out2 = np.asarray(ops.decode_attention(q, k2, v2, valid, layout="bksd",
+                                           block_s=32))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # rwkv6 chunked scan
 # ---------------------------------------------------------------------------

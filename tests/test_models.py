@@ -122,6 +122,52 @@ def test_decode_matches_forward(arch):
                                rtol=tol, atol=tol)
 
 
+BATCH_STEP_ARCHS = ["tinyllama-1.1b", "qwen3-moe-235b-a22b", "rwkv6-3b",
+                    "recurrentgemma-9b", "whisper-medium"]
+
+
+@pytest.mark.parametrize("arch", BATCH_STEP_ARCHS)
+def test_decode_step_batch_matches_decode_step(arch):
+    """Aligned lanes: decode_step_batch with an equal pos vector must
+    reproduce decode_step with the scalar pos (logits and cache)."""
+    cfg, mod, params, batch = _setup(arch)
+    kw = {"frames": batch["frames"]} if cfg.family == "audio" else {}
+    _, cache = mod.prefill(cfg, params, batch["tokens"], CACHE, **kw)
+    tok = batch["tokens"][:, -1:]
+    lg_s, cache_s = mod.decode_step(cfg, params, tok, cache, jnp.int32(S))
+    lg_b, cache_b = mod.decode_step_batch(
+        cfg, params, tok, cache, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(lg_b, np.float32).reshape(B, -1),
+        np.asarray(lg_s, np.float32).reshape(B, -1), rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(cache_b), jax.tree.leaves(cache_s)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-9b",
+                                  "whisper-medium"])
+def test_decode_step_batch_ragged_positions(arch):
+    """Ragged lanes: lane i of one decode_step_batch call with a ragged
+    pos vector must equal a B=1 decode_step at pos[i] — per-lane RoPE
+    positions, ring writes, and valid masks must not couple lanes."""
+    cfg, mod, params, batch = _setup(arch)
+    kw = {"frames": batch["frames"]} if cfg.family == "audio" else {}
+    _, cache = mod.prefill(cfg, params, batch["tokens"], CACHE, **kw)
+    tok = batch["tokens"][:, -1:]
+    pos = jnp.array([S, S - 7], jnp.int32)
+    lg_b, _ = mod.decode_step_batch(cfg, params, tok, cache, pos)
+    lg_b = np.asarray(lg_b, np.float32).reshape(B, -1)
+    for i in range(B):
+        row = jax.tree.map(lambda c: c[:, i:i + 1], cache)
+        lg_i, _ = mod.decode_step(cfg, params, tok[i:i + 1], row,
+                                  jnp.int32(int(pos[i])))
+        np.testing.assert_allclose(
+            lg_b[i], np.asarray(lg_i, np.float32).reshape(-1),
+            rtol=1e-4, atol=1e-4)
+
+
 def test_moe_router_balance_aux_loss():
     cfg, mod, params, batch = _setup("qwen3-moe-235b-a22b")
     loss, metrics = mod.loss_fn(cfg, params, batch)

@@ -152,3 +152,150 @@ def test_request_exceeding_cap_rejected(tiny):
     sched = _sched(cfg, params, max_new_cap=8)
     with pytest.raises(ValueError):
         sched.submit(Request(uid=0, prompt=[1], max_new_tokens=9))
+
+
+# ---------------------------------------------------------------------------
+# ragged batched decode (PR 2): lane-major path vs the vmapped reference
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = ["tinyllama-1.1b", "qwen3-moe-235b-a22b", "rwkv6-3b",
+                "recurrentgemma-9b", "whisper-medium"]
+
+
+def test_scheduler_defaults_to_batched_decode(tiny):
+    cfg, params = tiny
+    assert _sched(cfg, params).decode_mode == "batched"
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_batched_decode_token_identical_to_vmapped(arch):
+    """Acceptance: the default lane-major batched decode step must
+    reproduce the vmapped B=1 reference path token for token (temp 0) —
+    including mid-flight admission, so the lanes sit at genuinely ragged
+    positions when the fused attention call runs."""
+    cfg = reduced(get_config(arch))
+    params = models.init_params(cfg, KEY)
+    prompts = [[3, 1, 4, 1, 5], [2, 7], [9, 8, 7, 6]]
+    outs = {}
+    for mode in ("vmapped", "batched"):
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        sched = ContinuousBatchingScheduler(
+            cfg, params, max_slots=2, cache_len=64, max_new_cap=16,
+            decode_mode=mode)
+        sched.submit(reqs[0])
+        for _ in range(3):
+            sched.tick()              # lane 0 runs ahead -> ragged pos
+        sched.submit(reqs[1])
+        sched.submit(reqs[2])
+        sched.run()
+        assert all(len(r.output) == 6 for r in reqs)
+        outs[mode] = [r.output for r in reqs]
+    assert outs["batched"] == outs["vmapped"]
+
+
+def test_unknown_attn_backend_rejected(tiny):
+    """A typo'd backend must error, not silently benchmark 'ref'."""
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="attn_backend"):
+        _sched(cfg, params, attn_backend="palas")
+
+
+def test_batched_decode_pallas_backend_matches_ref(tiny):
+    """The pallas-kernel registry backend (interpret on CPU) must be
+    token-identical to the jnp ref backend through the full scheduler."""
+    cfg, params = tiny
+    outs = {}
+    for backend in ("ref", "pallas"):
+        reqs = [Request(uid=i, prompt=[3, 1, 4, 1, 5][:3 + i],
+                        max_new_tokens=5) for i in range(2)]
+        sched = _sched(cfg, params, attn_backend=backend)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        outs[backend] = [r.output for r in reqs]
+    assert outs["pallas"] == outs["ref"]
+
+
+# ---------------------------------------------------------------------------
+# submit() ring-overflow guard
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_longer_than_cache_rejected(tiny):
+    cfg, params = tiny
+    sched = _sched(cfg, params)                  # cache_len=64
+    with pytest.raises(ValueError, match="cache_len"):
+        sched.submit(Request(uid=0, prompt=[1] * 65, max_new_tokens=4))
+    # at exactly cache_len the ring does not wrap during prefill
+    sched.submit(Request(uid=1, prompt=[1] * 64, max_new_tokens=4))
+
+
+def test_bucket_padding_beyond_cache_rejected(tiny):
+    """A short prompt whose BUCKET pads past cache_len must also be
+    rejected — the pad tokens would wrap the ring just the same."""
+    cfg, params = tiny
+    sched = _sched(cfg, params, prefill_buckets=[128])
+    with pytest.raises(ValueError, match="cache_len"):
+        sched.submit(Request(uid=0, prompt=[1] * 10, max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# prefill_buckets semantics
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_buckets_match_explicit_leftpad(tiny):
+    """Bucketed admission is DEFINED as left-pad to the bucket size: a
+    len-5 prompt admitted through an 8-bucket must match an unbucketed
+    run of the explicitly left-padded prompt, token for token (temp 0)."""
+    cfg, params = tiny
+    prompt = [3, 1, 4, 1, 5]
+    rb = Request(uid=0, prompt=list(prompt), max_new_tokens=8)
+    sb = _sched(cfg, params, prefill_buckets=[8])
+    sb.submit(rb)
+    sb.run()
+    rp = Request(uid=1, prompt=[0] * 3 + prompt, max_new_tokens=8)
+    sp = _sched(cfg, params)
+    sp.submit(rp)
+    sp.run()
+    assert rb.output == rp.output
+
+
+def test_prefill_buckets_exact_fit_matches_exact_prefill(tiny):
+    """A prompt that exactly fills its bucket takes no padding — outputs
+    must equal the exact-length (bucketless) prefill."""
+    cfg, params = tiny
+    prompt = [5, 9, 2, 6, 5, 3, 5, 8]            # len 8 == bucket
+    rb = Request(uid=0, prompt=list(prompt), max_new_tokens=8)
+    sb = _sched(cfg, params, prefill_buckets=[8, 16])
+    sb.submit(rb)
+    sb.run()
+    re_ = Request(uid=1, prompt=list(prompt), max_new_tokens=8)
+    se = _sched(cfg, params)
+    se.submit(re_)
+    se.run()
+    assert rb.output == re_.output
+
+
+def test_prefill_buckets_per_lane_temperature(tiny):
+    """Per-request temperatures stay per-lane under bucketed admission:
+    the greedy lane must match its solo bucketed run while a sampling
+    lane shares the batch."""
+    cfg, params = tiny
+    solo = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=8)
+    s1 = _sched(cfg, params, prefill_buckets=[8])
+    s1.submit(solo)
+    s1.run()
+
+    greedy = Request(uid=1, prompt=[5, 6, 7], max_new_tokens=8,
+                     temperature=0.0)
+    hot = Request(uid=2, prompt=[9, 8, 7, 6], max_new_tokens=8,
+                  temperature=1.0)
+    s2 = _sched(cfg, params, prefill_buckets=[8])
+    s2.submit(greedy)
+    s2.submit(hot)
+    s2.run()
+    assert greedy.output == solo.output
+    assert len(hot.output) == 8
+    assert all(0 <= t < cfg.vocab_size for t in hot.output)

@@ -112,6 +112,27 @@ def main():
         "", f"batched >= vmapped dense at batch={big} "
         f"(measured {kernel_ratio:.2f}x)")
 
+    # -- kv_dtype: bf16 vs int8 quantized KV cache on the batched path ----
+    kv_bytes_per_token = {}
+    for kvd in ("bf16", "int8"):
+        for batch in batches:
+            eng = ServingEngine(cfg, params, max_batch=batch, cache_len=128,
+                                decode_mode="batched", kv_dtype=kvd)
+            rng = np.random.default_rng(0)
+            st = _warm_and_measure(eng, batch, max_new, rng, repeats)
+            cache = eng._sched.state["cache"]
+            kvb = sum(np.asarray(cache[n]).nbytes for n in
+                      ("k", "v", "k_scale", "v_scale") if n in cache)
+            kv_bytes_per_token[kvd] = kvb / (batch * eng._sched.cache_len)
+            out[f"batched_{kvd}_b{batch}"] = st.tok_per_s
+            row(f"kv={kvd:5s} batch={batch}", f"{st.tok_per_s:8.1f}",
+                "tok/s", f"{kv_bytes_per_token[kvd]:.1f} KV bytes/token "
+                f"(decode {st.decode_s*1e3:.0f}ms)")
+    kv_ratio = kv_bytes_per_token["bf16"] / kv_bytes_per_token["int8"]
+    row("int8 KV compression", f"{kv_ratio:8.2f}", "x",
+        f"bytes/token bf16 vs int8+scales (2D/(D+4) at "
+        f"D={cfg.resolved_head_dim})")
+
     # -- mid-flight admission: the workload the aligned loop can't run ----
     n_req = 6 if smoke else 16
     slots = 2 if smoke else 4
@@ -170,6 +191,9 @@ def main():
         "tokens_per_s": {k: round(v, 2) for k, v in out.items()},
         "batched_vs_vmapped_at_max_batch": round(kernel_ratio, 3),
         "per_token_latency_ms_b1": round(per_tok_ms, 2),
+        "kv_bytes_per_token": {k: round(v, 2)
+                               for k, v in kv_bytes_per_token.items()},
+        "kv_bytes_ratio_bf16_over_int8": round(kv_ratio, 3),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

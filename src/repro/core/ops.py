@@ -464,16 +464,47 @@ def _decode_attn_pallas_b(q, k_cache, v_cache, valid_len, *, layout="bksd",
     return out[:, None].astype(q.dtype)
 
 
-def resolve_decode_backend(name: Optional[str]) -> str:
+def _decode_attn_ref_q8_b(q, k_cache, v_cache, valid_len, *, layout="bksd",
+                          k_scale=None, v_scale=None, interpret=None):
+    """Int8 cache + per-slot scales: the ragged q8 jnp oracle."""
+    del interpret
+    from repro.kernels.ref import decode_attention_q8_ref
+    out = decode_attention_q8_ref(q[:, 0], k_cache, v_cache,
+                                  k_scale, v_scale, valid_len, layout=layout)
+    return out[:, None].astype(q.dtype)
+
+
+def _decode_attn_pallas_q8_b(q, k_cache, v_cache, valid_len, *,
+                             layout="bksd", k_scale=None, v_scale=None,
+                             interpret=None):
+    """Int8 cache + per-slot scales: flash-decode with in-kernel dequant."""
+    from repro.kernels import ops as kops
+    out = kops.decode_attention_q8(q[:, 0], k_cache, v_cache,
+                                   k_scale, v_scale, valid_len,
+                                   layout=layout, interpret=interpret)
+    return out[:, None].astype(q.dtype)
+
+
+def resolve_decode_backend(name: Optional[str],
+                           quantized: bool = False) -> str:
     """``None``/'auto' -> 'pallas' on TPU (Mosaic kernel), 'ref' elsewhere
-    (the interpret-mode kernel would only emulate the block skipping)."""
+    (the interpret-mode kernel would only emulate the block skipping).
+
+    ``quantized=True`` (int8 KV cache) maps the base names onto their q8
+    twins — 'ref' -> 'ref_q8', 'pallas' -> 'pallas_q8' — so callers keep
+    selecting implementations by the same two names regardless of the
+    cache dtype."""
     if name in (None, "auto"):
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
+        name = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if quantized and name in ("ref", "pallas"):
+        name = name + "_q8"
     return name
 
 
 REGISTRY.register(OpSpec(
     kind="decode_attention",
     shape=lambda a, s: s,
-    backends={"ref": _decode_attn_ref_b, "pallas": _decode_attn_pallas_b},
+    backends={"ref": _decode_attn_ref_b, "pallas": _decode_attn_pallas_b,
+              "ref_q8": _decode_attn_ref_q8_b,
+              "pallas_q8": _decode_attn_pallas_q8_b},
 ))

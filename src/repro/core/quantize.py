@@ -16,6 +16,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Scales are clamped to this floor everywhere a scale is computed: an
+# all-zero channel would otherwise yield scale 0, and any path that later
+# divides by the scale (requantization, error normalization) would emit
+# NaN/inf.  1e-12 keeps 1/scale finite in fp32 while rounding true zeros
+# to exactly zero.
+SCALE_EPS = 1e-12
+
 
 @dataclass
 class QTensor:
@@ -39,10 +46,37 @@ def quantize(x: jax.Array, axis: int = -1) -> QTensor:
     axis = axis % x.ndim
     red = tuple(i for i in range(x.ndim) if i != axis)
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red)
-    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    scale = jnp.maximum(absmax / 127.0, SCALE_EPS)
     s = jnp.expand_dims(scale, red)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
     return QTensor(q.astype(jnp.int8), scale, axis)
+
+
+def quantize_into(x: jax.Array, axis: int = -1):
+    """Static-shape symmetric int8 quantization along one axis.
+
+    Unlike :func:`quantize` this returns raw ``(q, scale)`` arrays — no
+    QTensor wrapper — so it is usable under ``jit``, inside ``lax.scan``
+    bodies, and inside Pallas kernels.  ``q`` has the shape of ``x``
+    (int8); ``scale`` has that shape with ``axis`` removed (fp32).  This
+    is the KV-cache write path's quantizer: one scalar scale per reduced
+    row (e.g. per lane/head/ring-slot when ``axis`` is head_dim).
+    """
+    axis = axis % x.ndim
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                     keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, SCALE_EPS)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), jnp.squeeze(scale, axis)
+
+
+def dequantize_block(q: jax.Array, scale: jax.Array, axis: int = -1,
+                     dtype=jnp.float32):
+    """Inverse of :func:`quantize_into`: broadcast ``scale`` along
+    ``axis`` and multiply.  Static-shape, jit/Pallas-safe."""
+    axis = axis % q.ndim
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale, axis)).astype(dtype)
 
 
 def quantization_error(x: jax.Array, qt: QTensor) -> float:
@@ -71,16 +105,25 @@ def dequantize_tree(params, dtype=jnp.float32):
 
 
 def tree_bytes(params) -> int:
+    """Total storage bytes of a tree, counting BOTH the int8 payload and
+    the scale arrays of every QTensor (at their actual itemsizes — a
+    future fp16-scale QTensor is counted correctly, not assumed fp32)."""
     def nbytes(x):
         if isinstance(x, QTensor):
-            return x.q.size * 1 + x.scale.size * 4
+            return (x.q.size * x.q.dtype.itemsize
+                    + x.scale.size * x.scale.dtype.itemsize)
         return x.size * x.dtype.itemsize
     return int(sum(jax.tree.leaves(jax.tree.map(
         nbytes, params, is_leaf=lambda x: isinstance(x, QTensor)))))
 
 
 def compression_ratio(params) -> float:
-    """fp32 bytes / quantized bytes for a quantized tree."""
+    """fp32 bytes / quantized bytes for a quantized tree.
+
+    The denominator is :func:`tree_bytes`, which includes QTensor scale
+    arrays — excluding them would overstate the ratio by ~``D/(D+4)``
+    per ``(D,)``-channel tensor.
+    """
     orig = int(sum(4 * l.q.size if isinstance(l, QTensor)
                    else l.size * l.dtype.itemsize
                    for l in jax.tree.leaves(

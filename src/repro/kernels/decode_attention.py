@@ -21,9 +21,28 @@ cost proportional to each lane's actual prefix instead of ``B x S``:
   * the flash update is wrapped in ``@pl.when(si * bs < valid)`` so the
     skipped blocks also cost no MXU flops (block-level early exit).
 
+Quantized caches (PR 6): pass ``k_scale``/``v_scale`` and the K/V
+operands are consumed as int8 with one fp32 scale per (lane, kv-head,
+ring slot), dequantized INSIDE the block loop — HBM streams half the
+bytes of bf16 and the fp32 math is unchanged.  The per-slot (not
+per-channel) scale granularity is what lets dequant fold into the
+existing dots with zero layout churn:
+
+    scores = (q . k_int^T) * k_scale[slot]      (scale applied to the
+                                                 score column, after the
+                                                 MXU dot)
+    out   += (p * v_scale[slot]) . v_int        (scale folded into the
+                                                 probability row, before
+                                                 the MXU dot)
+
+so dequant costs two elementwise multiplies on (G, bs) tiles — no
+transposes, no materialized fp copy of the cache — and composes with the
+block skipping above (skipped blocks also skip their scale DMA).
+
 Layouts: ``bskd`` (k/v ``(B, S, KV, D)`` — the historical kernel-bench
-layout) and ``bksd`` (``(B, KV, S, D)`` — the serving ring-cache layout,
-consumed without any transpose).
+layout; scales ``(B, S, KV)``) and ``bksd`` (``(B, KV, S, D)`` — the
+serving ring-cache layout, consumed without any transpose; scales
+``(B, KV, S)``).
 """
 from __future__ import annotations
 
@@ -38,8 +57,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale, bs, ns, kv_major):
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, *rest,
+                   scale, bs, ns, kv_major, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     si = pl.program_id(2)
 
@@ -64,6 +87,11 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
             k = k_ref[0, :, 0].astype(jnp.float32)
             v = v_ref[0, :, 0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if quantized:
+            # per-slot K scales dequantize the score COLUMNS — a lane-dim
+            # broadcast over (G, bs), no transpose
+            ks = ks_ref[0, 0] if kv_major else ks_ref[0, :, 0]   # (bs,)
+            s = s * ks[None, :]
         spos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(spos < lane_valid, s, NEG_INF)
         m_prev = m_ref[...]
@@ -71,6 +99,11 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        if quantized:
+            # per-slot V scales fold into the probability rows before the
+            # PV dot: p . diag(vs) . v_int == (p * vs) . v_int
+            vs = vs_ref[0, 0] if kv_major else vs_ref[0, :, 0]   # (bs,)
+            p = p * vs[None, :]
         acc_ref[...] = acc_ref[...] * corr + jnp.dot(
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
@@ -82,11 +115,20 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
-                     block_s: int = 512, interpret: bool = False):
+                     block_s: int = 512, interpret: bool = False,
+                     k_scale=None, v_scale=None):
     """q: (B, H, D); k, v: (B, S, KV, D) for ``layout='bskd'`` or
     (B, KV, S, D) for ``layout='bksd'``; valid_len: scalar int32 or a
     per-lane (B,) vector (each entry >= 1 — the number of valid ring
-    slots, counted from slot 0)."""
+    slots, counted from slot 0).
+
+    When ``k_scale``/``v_scale`` are given (``(B, S, KV)`` for 'bskd',
+    ``(B, KV, S)`` for 'bksd'; fp32), k/v are int8 payloads dequantized
+    per ring slot inside the block loop (the ``pallas_q8`` backend).
+    """
+    quantized = k_scale is not None
+    if quantized:
+        assert v_scale is not None
     b, h, d = q.shape
     if layout == "bskd":
         s, kvh, seq_axis = k.shape[1], k.shape[2], 1
@@ -100,6 +142,11 @@ def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
         zp = [(0, 0)] * 4
         zp[seq_axis] = (0, pad)
         k, v = jnp.pad(k, zp), jnp.pad(v, zp)
+        if quantized:
+            sp = [(0, 0)] * 3
+            sp[seq_axis] = (0, pad)      # scale seq axis == cache seq axis
+            k_scale = jnp.pad(k_scale, sp)
+            v_scale = jnp.pad(v_scale, sp)
     ns = (s + pad) // bs
     scale = 1.0 / math.sqrt(d)
     qg = q.reshape(b, kvh, g, d)
@@ -117,23 +164,36 @@ def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
         kv_spec = pl.BlockSpec(
             (1, bs, 1, d),
             lambda bi, ki, si, vr: (bi, _clamp(si, vr, bi), ki, 0))
+        sc_spec = pl.BlockSpec(
+            (1, bs, 1),
+            lambda bi, ki, si, vr: (bi, _clamp(si, vr, bi), ki))
     else:
         kv_spec = pl.BlockSpec(
             (1, 1, bs, d),
             lambda bi, ki, si, vr: (bi, ki, _clamp(si, vr, bi), 0))
+        sc_spec = pl.BlockSpec(
+            (1, 1, bs),
+            lambda bi, ki, si, vr: (bi, ki, _clamp(si, vr, bi)))
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, ki, si, vr: (bi, ki, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [valid, qg, k, v]
+    if quantized:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
 
     out = pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns,
-                          kv_major=(layout == "bksd")),
+                          kv_major=(layout == "bksd"), quantized=quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, kvh, ns),
-            in_specs=[
-                pl.BlockSpec((1, 1, g, d),
-                             lambda bi, ki, si, vr: (bi, ki, 0, 0)),
-                kv_spec,
-                kv_spec,
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, g, d),
                                    lambda bi, ki, si, vr: (bi, ki, 0, 0)),
             scratch_shapes=[
@@ -142,7 +202,8 @@ def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
                 pltpu.VMEM((g, d), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d),
+                                       jnp.float32 if quantized else q.dtype),
         interpret=interpret,
-    )(valid, qg, k, v)
-    return out.reshape(b, h, d)
+    )(*operands)
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -101,6 +101,18 @@ def decode_attention(q, k, v, valid_len, *, layout="bskd", block_s=512,
                                 interpret=_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("layout", "block_s",
+                                             "interpret"))
+def decode_attention_q8(q, k, v, k_scale, v_scale, valid_len, *,
+                        layout="bskd", block_s=512, interpret=None):
+    """Int8-cache flash-decode: k/v are int8 payloads dequantized inside
+    the block loop with per-(lane, head, slot) fp32 scales."""
+    return _da.decode_attention(q, k, v, valid_len, layout=layout,
+                                block_s=block_s, k_scale=k_scale,
+                                v_scale=v_scale,
+                                interpret=_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_chunked(r, k, v, w, u, *, chunk=16, interpret=None):
     t = r.shape[1]

@@ -70,6 +70,45 @@ def decode_attention_ref(q, k, v, valid_len, *, layout="bskd"):
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def decode_attention_q8_ref(q, k_q, v_q, k_scale, v_scale, valid_len, *,
+                            layout="bskd"):
+    """Ragged q8 decode oracle: int8 K/V payloads + one fp32 scale per
+    (lane, kv-head, ring slot), fp32 accumulation throughout.
+
+    q: (B, H, D); k_q, v_q: int8 (B, S, KV, D) ('bskd') or (B, KV, S, D)
+    ('bksd'); k_scale, v_scale: (B, S, KV) / (B, KV, S); valid_len:
+    scalar int or per-lane (B,) vector.
+
+    Scales are applied in the SAME order as the Pallas kernel — K scales
+    multiply the score columns after the QK dot, V scales fold into the
+    probability rows before the PV dot — so kernel-vs-ref agreement is
+    limited only by the online-softmax accumulation order.
+    """
+    b, h, d = q.shape
+    if layout == "bksd":
+        k_q = k_q.transpose(0, 2, 1, 3)
+        v_q = v_q.transpose(0, 2, 1, 3)
+        k_scale = k_scale.transpose(0, 2, 1)      # -> (B, S, KV)
+        v_scale = v_scale.transpose(0, 2, 1)
+    s, kvh = k_q.shape[1], k_q.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k_q.astype(jnp.float32)) / math.sqrt(d)
+    # (B, S, KV) -> (B, KV, 1, S) broadcast over the g query heads
+    scores = scores * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None]
+    valid = jnp.asarray(valid_len)
+    if valid.ndim == 0:
+        mask = (jnp.arange(s) < valid)[None, None, None]
+    else:
+        mask = (jnp.arange(s)[None, :] < valid[:, None])[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None]
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_q.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q: (B, S, H, D); k, v: (B, S, KV, D) — full-sequence attention."""
     from repro.models.common import attention_full

@@ -19,6 +19,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models import common as cm
+from repro.models import transformer as tfm
 from repro.models.common import P
 from repro.sharding_hints import hint
 
@@ -154,15 +155,37 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, kv_dtype=None):
     L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
     se = cfg.encoder_seq
-    return {
-        "k": jnp.zeros((L, batch, cache_len, kv, hd), dtype),
-        "v": jnp.zeros((L, batch, cache_len, kv, hd), dtype),
-        "xk": jnp.zeros((L, batch, se, kv, hd), dtype),
-        "xv": jnp.zeros((L, batch, se, kv, hd), dtype),
+    kvd = tfm.kv_cache_dtype(dtype, kv_dtype)
+    xd = jnp.bfloat16 if kv_dtype == "bf16" else dtype
+    cache = {
+        "k": jnp.zeros((L, batch, cache_len, kv, hd), kvd),
+        "v": jnp.zeros((L, batch, cache_len, kv, hd), kvd),
+        "xk": jnp.zeros((L, batch, se, kv, hd), xd),
+        "xv": jnp.zeros((L, batch, se, kv, hd), xd),
     }
+    if kv_dtype == "int8":
+        # bskd layout -> per-slot scales indexed (L, B, S, KV)
+        cache["k_scale"] = jnp.zeros((L, batch, cache_len, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((L, batch, cache_len, kv), jnp.float32)
+    return cache
+
+
+def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
+    """Quantize only the decoder self-attention ring; the cross-attention
+    caches (xk/xv — written once at admission, read every step) stay in
+    the float cache dtype."""
+    if kv_dtype is None:
+        return cache
+    if kv_dtype == "bf16":
+        return {k: v.astype(jnp.bfloat16) for k, v in cache.items()}
+    assert kv_dtype == "int8", kv_dtype
+    from repro.core.quantize import quantize_into
+    kq, ks = quantize_into(cache["k"], axis=-1)
+    vq, vs = quantize_into(cache["v"], axis=-1)
+    return {**cache, "k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
 
 
 def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
@@ -220,32 +243,60 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
     x = params["embed"][token]                         # (B,1,d)
     hd = cfg.resolved_head_dim
     b = x.shape[0]
+    quantized = "k_scale" in cache
 
-    def layer(x, scanned):
-        lp, ck, cv, xk, xv = scanned
+    def self_attn(lp, x, ck, cv, cks=None, cvs=None):
         xn = _ln(x, lp, "ln")
         q, k, v = _qkv(cfg, lp, xn, xn)
         posv = pos[:, None]
         q = cm.apply_rope(q, posv, cfg.rope_theta)
         k = cm.apply_rope(k, posv, cfg.rope_theta)
-        ck, cv = cm.cache_write_batch(ck, cv, k, v, pos, seq_axis=1)
         valid = cm.cache_valid_len(pos, ck.shape[1])
-        a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
-                                      backend=attn_backend)
+        if cks is None:
+            ck, cv = cm.cache_write_batch(ck, cv, k, v, pos, seq_axis=1)
+            a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
+                                          backend=attn_backend)
+        else:
+            ck, cv, cks, cvs = cm.cache_write_batch_q8(
+                ck, cv, cks, cvs, k, v, pos, seq_axis=1)
+            a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
+                                          backend=attn_backend,
+                                          k_scale=cks, v_scale=cvs)
         x = x + (a.reshape(b, 1, cfg.q_dim) @ lp["wo"] + lp["bo"])
+        return x, ck, cv, cks, cvs
+
+    def rest(lp, x, xk, xv):
         xn = _ln(x, lp, "x_ln")
         qx = (xn @ lp["x_wq"] + lp["x_bq"]).reshape(b, 1, cfg.num_heads, hd)
         ax = cm.attention_decode(qx, xk, xv, xk.shape[1])
         x = x + (ax.reshape(b, 1, cfg.q_dim) @ lp["x_wo"] + lp["x_bo"])
-        x = x + _mlp(cfg, lp, x)
-        return x, (ck, cv)
+        return x + _mlp(cfg, lp, x)
 
-    x, (ck, cv) = lax.scan(
-        layer, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
-                   cache["xv"]))
+    if quantized:
+        def layer(x, scanned):
+            lp, ck, cv, cks, cvs, xk, xv = scanned
+            x, ck, cv, cks, cvs = self_attn(lp, x, ck, cv, cks, cvs)
+            return rest(lp, x, xk, xv), (ck, cv, cks, cvs)
+
+        x, (ck, cv, cks, cvs) = lax.scan(
+            layer, x, (params["dec"], cache["k"], cache["v"],
+                       cache["k_scale"], cache["v_scale"], cache["xk"],
+                       cache["xv"]))
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                     "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        def layer(x, scanned):
+            lp, ck, cv, xk, xv = scanned
+            x, ck, cv, _, _ = self_attn(lp, x, ck, cv)
+            return rest(lp, x, xk, xv), (ck, cv)
+
+        x, (ck, cv) = lax.scan(
+            layer, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                       cache["xv"]))
+        new_cache = {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
     x = cm.layer_norm(x, params["final_ln_w"], params["final_ln_b"])
     logits = x @ params["embed"].T.astype(x.dtype)
-    return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+    return logits, new_cache
 
 
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, frames=None, *,

@@ -311,6 +311,7 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 init_cache = tfm.init_cache
 cache_spec = tfm.cache_spec
+cache_to_kv_dtype = tfm.cache_to_kv_dtype
 
 
 def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
@@ -334,8 +335,28 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
                       window: int = 0, attn_backend=None):
     """Lane-major decode: tokens (B, 1); pos (B,) per-lane (see
     transformer.decode_step_batch).  The MoE block routes all B lane
-    tokens through one dispatch instead of B single-token dispatches."""
+    tokens through one dispatch instead of B single-token dispatches.
+    An int8 cache (``k_scale`` leaf) takes the quantizing-write + q8
+    attention path, same as the dense transformer."""
     x = tfm._embed(cfg, params, tokens)
+    quantized = "k_scale" in cache
+
+    if quantized:
+        def layer(x, scanned):
+            lp, ck, cv, cks, cvs = scanned
+            a, ck, cv, cks, cvs = tfm.attn_decode_batch(
+                cfg, lp, x, ck, cv, pos, window=window,
+                backend=attn_backend, cks=cks, cvs=cvs)
+            x = x + a
+            m, _ = _moe_block(cfg, lp, x)
+            return x + m, (ck, cv, cks, cvs)
+
+        x, (ck, cv, cks, cvs) = lax.scan(
+            layer, x, (params["layers"], cache["k"], cache["v"],
+                       cache["k_scale"], cache["v_scale"]))
+        return tfm._logits(cfg, params, x), {"k": ck, "v": cv,
+                                             "k_scale": cks,
+                                             "v_scale": cvs}
 
     def layer(x, scanned):
         lp, ck, cv = scanned

@@ -204,17 +204,39 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, kv_dtype=None):
     n_rec, n_attn = _counts(cfg)
     w = cfg.lru_width or cfg.d_model
     wlen = min(cache_len, cfg.local_window)
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    return {
+    kvd = tfm.kv_cache_dtype(dtype, kv_dtype)
+    cache = {
         "h": jnp.zeros((n_rec, batch, w), jnp.float32),
         "conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dtype),
-        "k": jnp.zeros((n_attn, batch, kv, wlen, hd), dtype),
-        "v": jnp.zeros((n_attn, batch, kv, wlen, hd), dtype),
+        "k": jnp.zeros((n_attn, batch, kv, wlen, hd), kvd),
+        "v": jnp.zeros((n_attn, batch, kv, wlen, hd), kvd),
     }
+    if kv_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((n_attn, batch, kv, wlen), jnp.float32)
+        cache["v_scale"] = jnp.zeros((n_attn, batch, kv, wlen), jnp.float32)
+    return cache
+
+
+def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
+    """Quantize only the local-attention KV windows; the recurrent state
+    ('h', fp32) and conv ring buffer are untouched — they are the
+    recurrence, not a cache, and int8-ing them would compound error every
+    step."""
+    if kv_dtype is None:
+        return cache
+    if kv_dtype == "bf16":
+        return {**cache, "k": cache["k"].astype(jnp.bfloat16),
+                "v": cache["v"].astype(jnp.bfloat16)}
+    assert kv_dtype == "int8", kv_dtype
+    from repro.core.quantize import quantize_into
+    kq, ks = quantize_into(cache["k"], axis=-1)
+    vq, vs = quantize_into(cache["v"], axis=-1)
+    return {**cache, "k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
 
 
 def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
@@ -280,7 +302,8 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
     del window
     x = params["embed"][token[:, 0]]
     kinds = layer_kinds(cfg)
-    hs, convs, ks, vs = [], [], [], []
+    quantized = "k_scale" in cache
+    hs, convs, ks, vs, kss, vss = [], [], [], [], [], []
     ri = ai = 0
     for li, kind in enumerate(kinds):
         if kind == "rec":
@@ -293,9 +316,17 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
             x = x + a
         else:
             lp = _slice(params["attn"], ai)
-            a, ck, cv = tfm.attn_decode_batch(
-                cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai], pos,
-                window=cfg.local_window, backend=attn_backend)
+            if quantized:
+                a, ck, cv, cks, cvs = tfm.attn_decode_batch(
+                    cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai],
+                    pos, window=cfg.local_window, backend=attn_backend,
+                    cks=cache["k_scale"][ai], cvs=cache["v_scale"][ai])
+                kss.append(cks)
+                vss.append(cvs)
+            else:
+                a, ck, cv = tfm.attn_decode_batch(
+                    cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai],
+                    pos, window=cfg.local_window, backend=attn_backend)
             ks.append(ck)
             vs.append(cv)
             ai += 1
@@ -307,6 +338,9 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
         "h": jnp.stack(hs), "conv": jnp.stack(convs),
         "k": jnp.stack(ks), "v": jnp.stack(vs),
     }
+    if quantized:
+        new_cache["k_scale"] = jnp.stack(kss)
+        new_cache["v_scale"] = jnp.stack(vss)
     return logits, new_cache
 
 

@@ -275,8 +275,9 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, kv_dtype=None):
     del cache_len  # O(1) state — the paper's roadmap item 4, realized
+    del kv_dtype   # no KV cache to quantize; accepted for API parity
     L, d = cfg.num_layers, cfg.d_model
     H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
     return {
@@ -284,6 +285,15 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
         "shift_tm": jnp.zeros((L, batch, d), dtype),
         "shift_cm": jnp.zeros((L, batch, d), dtype),
     }
+
+
+def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
+    """State passthrough: the wkv matrix state IS the recurrence (updated
+    in-place every step, fp32 by necessity), not a token cache — int8
+    round-trips would compound error unboundedly, so kv_dtype is a no-op
+    for this family."""
+    del kv_dtype
+    return cache
 
 
 def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):

@@ -123,14 +123,20 @@ def attn_decode(cfg: ArchConfig, lp, x, ck, cv, pos, *, window: int = 0):
 
 
 def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
-                      window: int = 0, backend=None):
+                      window: int = 0, backend=None, cks=None, cvs=None):
     """Lane-major ragged decode attention: x (B, 1, d); caches
     (B, KV, S, D); pos (B,) per-lane absolute positions.
 
     The batched analogue of :func:`attn_decode` — one QKV projection and
     ONE fused attention call across all lanes (ragged valid vector)
     instead of vmapping B=1 steps.  ``backend`` selects the registry
-    implementation ('ref' | 'pallas' | None=auto)."""
+    implementation ('ref' | 'pallas' | None=auto).
+
+    With ``cks``/``cvs`` (per-slot scale buffers, (B, KV, S)) the cache
+    is int8: the new token is quantized on write and attention resolves
+    the q8 backend twins (in-kernel dequant).  Returns
+    ``(out, ck, cv)`` in float mode, ``(out, ck, cv, cks, cvs)`` in q8
+    mode."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     cache_size = ck.shape[2]
@@ -144,13 +150,21 @@ def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
     posv = pos[:, None]                                # (B, 1) per-lane
     q = cm.apply_rope(q, posv, cfg.rope_theta)
     k = cm.apply_rope(k, posv, cfg.rope_theta)
-    ck, cv = cm.cache_write_batch(ck, cv, k.transpose(0, 2, 1, 3),
-                                  v.transpose(0, 2, 1, 3), pos, seq_axis=2)
+    kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
     valid = cm.cache_valid_len(pos, cache_size)        # (B,) ragged
+    if cks is None:
+        ck, cv = cm.cache_write_batch(ck, cv, kT, vT, pos, seq_axis=2)
+        out = cm.decode_attention_named(q, ck, cv, valid, layout="bksd",
+                                        backend=backend)
+        out = out.reshape(b, 1, cfg.q_dim)
+        return out @ lp["wo"], ck, cv
+    ck, cv, cks, cvs = cm.cache_write_batch_q8(ck, cv, cks, cvs, kT, vT,
+                                               pos, seq_axis=2)
     out = cm.decode_attention_named(q, ck, cv, valid, layout="bksd",
-                                    backend=backend)
+                                    backend=backend, k_scale=cks,
+                                    v_scale=cvs)
     out = out.reshape(b, 1, cfg.q_dim)
-    return out @ lp["wo"], ck, cv
+    return out @ lp["wo"], ck, cv, cks, cvs
 
 
 def mlp(cfg: ArchConfig, lp, x):
@@ -199,14 +213,53 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
     return loss, {"loss": loss}
 
 
+def kv_cache_dtype(dtype, kv_dtype):
+    """Resolve the K/V buffer dtype from a ``kv_dtype`` option: ``None``
+    keeps the cache dtype (back-compat), 'bf16' halves KV bytes, 'int8'
+    quarters them (plus per-slot fp32 scales)."""
+    if kv_dtype is None:
+        return dtype
+    try:
+        return {"bf16": jnp.bfloat16, "int8": jnp.int8}[kv_dtype]
+    except KeyError:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
+                         "(expected None, 'bf16' or 'int8')") from None
+
+
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16):
-    """Decoder-only cache layout: (L, B, KV, S, D) ('bksd')."""
+               dtype=jnp.bfloat16, kv_dtype=None):
+    """Decoder-only cache layout: (L, B, KV, S, D) ('bksd').
+
+    ``kv_dtype='int8'`` stores K/V as int8 plus per-(lane, head, slot)
+    fp32 scale buffers — the layout the ``*_q8`` decode backends consume.
+    """
     L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-    return {
-        "k": jnp.zeros((L, batch, kv, cache_len, hd), dtype),
-        "v": jnp.zeros((L, batch, kv, cache_len, hd), dtype),
+    kvd = kv_cache_dtype(dtype, kv_dtype)
+    cache = {
+        "k": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
+        "v": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
     }
+    if kv_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((L, batch, kv, cache_len), jnp.float32)
+        cache["v_scale"] = jnp.zeros((L, batch, kv, cache_len), jnp.float32)
+    return cache
+
+
+def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
+    """Convert a float prefill cache into the ``kv_dtype`` layout of
+    :func:`init_cache` (same tree structure, so a scheduler can splice
+    an admitted lane into its live state).  'int8' quantizes each ring
+    slot over head_dim — one scale per (layer, lane, head, slot)."""
+    if kv_dtype is None:
+        return cache
+    if kv_dtype == "bf16":
+        return {**cache, "k": cache["k"].astype(jnp.bfloat16),
+                "v": cache["v"].astype(jnp.bfloat16)}
+    assert kv_dtype == "int8", kv_dtype
+    from repro.core.quantize import quantize_into
+    kq, ks = quantize_into(cache["k"], axis=-1)
+    vq, vs = quantize_into(cache["v"], axis=-1)
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
 
 
 def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, dtype):
@@ -249,8 +302,27 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
     RoPE positions and ring writes, and one fused ragged attention call
     per layer — instead of vmapping B=1 :func:`decode_step` over lanes.
     Returns (logits (B, 1, V), cache), numerically matching the vmapped
-    reference path."""
+    reference path.  An int8 cache (the ``k_scale`` leaf marks it) takes
+    the quantizing write + q8 attention path; the branch is static, so
+    each cache dtype compiles its own specialization."""
     x = _embed(cfg, params, tokens)
+    quantized = "k_scale" in cache
+
+    if quantized:
+        def layer(x, scanned):
+            lp, ck, cv, cks, cvs = scanned
+            a, ck, cv, cks, cvs = attn_decode_batch(
+                cfg, lp, x, ck, cv, pos, window=window,
+                backend=attn_backend, cks=cks, cvs=cvs)
+            x = x + a
+            x = x + mlp(cfg, lp, x)
+            return x, (ck, cv, cks, cvs)
+
+        x, (ck, cv, cks, cvs) = lax.scan(
+            layer, x, (params["layers"], cache["k"], cache["v"],
+                       cache["k_scale"], cache["v_scale"]))
+        return _logits(cfg, params, x), {"k": ck, "v": cv,
+                                         "k_scale": cks, "v_scale": cvs}
 
     def layer(x, scanned):
         lp, ck, cv = scanned

@@ -95,7 +95,8 @@ class ContinuousBatchingScheduler:
                  pad_id: int = 0, seed: int = 0,
                  prefill_buckets: Optional[List[int]] = None,
                  decode_mode: str = "batched",
-                 attn_backend: Optional[str] = None):
+                 attn_backend: Optional[str] = None,
+                 kv_dtype: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -115,12 +116,24 @@ class ContinuousBatchingScheduler:
                 not hasattr(self.mod, "decode_step_batch"):
             decode_mode = "vmapped"
         self.decode_mode = decode_mode
+        # kv_dtype: None keeps the legacy f32 cache (token-identical to
+        # the vmapped reference); 'bf16' halves KV bytes; 'int8' quarters
+        # them via the per-slot-scale quantized cache + *_q8 attention.
+        if kv_dtype not in (None, "bf16", "int8"):
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
+                             "(expected None, 'bf16' or 'int8')")
+        if kv_dtype == "int8" and decode_mode != "batched":
+            raise ValueError(
+                "kv_dtype='int8' requires decode_mode='batched' — the "
+                "single-token decode_step has no quantized cache path")
+        self.kv_dtype = kv_dtype
         # registry name (ref|pallas|auto); the registry's backend() falls
         # back to 'ref' silently, so reject typos here where the intent
         # is explicit — a misspelled 'pallas' must not benchmark 'ref'
         if attn_backend is not None:
             from repro.core.ops import REGISTRY, resolve_decode_backend
-            resolved = resolve_decode_backend(attn_backend)
+            resolved = resolve_decode_backend(
+                attn_backend, quantized=(kv_dtype == "int8"))
             known = REGISTRY.op("decode_attention").backends
             if resolved not in known:
                 raise ValueError(
@@ -152,7 +165,8 @@ class ContinuousBatchingScheduler:
             "out_len": jnp.zeros((b,), jnp.int32),
             "key": jax.random.PRNGKey(seed),
             "cache": self.mod.init_cache(self.cfg, b, self.cache_len,
-                                         jnp.float32),
+                                         jnp.float32,
+                                         kv_dtype=self.kv_dtype),
         }
 
     def _decode_slots(self, params, tokens, cache, pos):
@@ -208,6 +222,9 @@ class ContinuousBatchingScheduler:
         logits, cache1 = self.mod.prefill(self.cfg, params, prompt,
                                           self.cache_len,
                                           cache_dtype=jnp.float32)
+        # quantize/cast AFTER the float prefill so admission pays the
+        # conversion once, and the spliced row matches the live layout
+        cache1 = self.mod.cache_to_kv_dtype(self.cfg, cache1, self.kv_dtype)
         key, sub = jax.random.split(state["key"])
         first = _sample(sub, logits[:, -1], temp[None])[0]
         cache = jax.tree.map(lambda c, c1: c.at[:, slot].set(c1[:, 0]),

@@ -64,7 +64,8 @@ class ServingEngine:
                  cache_len: int = 256, pad_id: int = 0, seed: int = 0,
                  prefill_buckets: Optional[List[int]] = None,
                  decode_mode: str = "batched",
-                 attn_backend: Optional[str] = None):
+                 attn_backend: Optional[str] = None,
+                 kv_dtype: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -75,6 +76,7 @@ class ServingEngine:
         self.prefill_buckets = prefill_buckets
         self.decode_mode = decode_mode
         self.attn_backend = attn_backend
+        self.kv_dtype = kv_dtype
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -109,7 +111,8 @@ class ServingEngine:
                 pad_id=self.pad_id, seed=self.seed,
                 prefill_buckets=self.prefill_buckets,
                 decode_mode=self.decode_mode,
-                attn_backend=self.attn_backend)
+                attn_backend=self.attn_backend,
+                kv_dtype=self.kv_dtype)
             self._sched.pending.extend(pending)
         return self._sched
 

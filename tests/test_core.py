@@ -270,6 +270,51 @@ def test_quantize_preserves_small_tensors():
     assert isinstance(qt["w"], quantize.QTensor)
 
 
+def test_quantize_zero_channel_finite():
+    """All-zero channels must produce a clamped (nonzero) scale and a
+    finite, exactly-zero round trip — scale 0 would NaN any later
+    division by scale (regression: unwritten KV ring slots are zeros)."""
+    w = jax.random.normal(KEY, (16, 8)).at[:, 3].set(0.0)
+    qt = quantize.quantize(w, axis=1)
+    assert float(qt.scale[3]) == np.float32(quantize.SCALE_EPS)
+    dq = np.asarray(qt.dequantize())
+    assert np.isfinite(dq).all() and (dq[:, 3] == 0.0).all()
+
+    q, scale = quantize.quantize_into(jnp.zeros((4, 8)), axis=-1)
+    assert np.isfinite(np.asarray(scale)).all()
+    assert (np.asarray(scale) > 0).all()
+    dq = np.asarray(quantize.dequantize_block(q, scale, axis=-1))
+    assert np.isfinite(dq).all() and (dq == 0.0).all()
+
+
+def test_quantize_into_roundtrip_jit():
+    """quantize_into/dequantize_block are static-shape and jit-safe (the
+    KV write path runs them inside a scanned, jitted decode step)."""
+    x = jax.random.normal(KEY, (2, 4, 8, 32))
+
+    @jax.jit
+    def rt(x):
+        q, s = quantize.quantize_into(x, axis=-1)
+        return q, s, quantize.dequantize_block(q, s, axis=-1)
+
+    q, s, dq = rt(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert s.shape == x.shape[:-1] and s.dtype == jnp.float32
+    assert float(jnp.abs(dq - x).max()) < 0.05
+
+
+def test_tree_bytes_counts_qtensor_scales():
+    """tree_bytes must include scale arrays; compression_ratio must use
+    the inclusive denominator (excluding scales overstates the ratio)."""
+    w = jax.random.normal(KEY, (64, 64))
+    qt = quantize.quantize(w)
+    want = 64 * 64 * 1 + 64 * 4            # int8 payload + fp32 scales
+    assert quantize.tree_bytes({"w": qt}) == want
+    ratio = quantize.compression_ratio({"w": qt})
+    assert abs(ratio - (64 * 64 * 4) / want) < 1e-9
+    assert ratio < 4.0                      # strictly below payload-only 4x
+
+
 # ---------------------------------------------------------------------------
 # Compression (roadmap items 7/8: pruning, low-rank approx matmul)
 # ---------------------------------------------------------------------------

@@ -296,6 +296,84 @@ def test_decode_attention_ragged_masks_per_lane():
 
 
 # ---------------------------------------------------------------------------
+# decode attention, int8 KV (in-kernel dequant)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_cache(k, v, layout):
+    from repro.core.quantize import quantize_into
+    del layout  # per-slot scales come from axis=-1 in either layout
+    kq, ks = quantize_into(k, axis=-1)
+    vq, vs = quantize_into(v, axis=-1)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("layout", ["bskd", "bksd"])
+@pytest.mark.parametrize("s,h,kv,d,block", [(256, 8, 4, 64, 64),
+                                            (128, 4, 1, 32, 128),
+                                            (192, 16, 16, 32, 64)])
+def test_decode_attention_q8_matches_oracle(layout, s, h, kv, d, block):
+    """The pallas_q8 kernel must match the ragged q8 jnp oracle exactly
+    (same int8 payloads, same scales, fp32 math in both) — including
+    ragged valid lengths that force the block-skip early exit to compose
+    with the in-kernel dequant."""
+    b = 4
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    shape = (b, s, kv, d) if layout == "bskd" else (b, kv, s, d)
+    k = rand(shape, key=ks[1])
+    v = rand(shape, key=ks[2])
+    kq, vq, kscale, vscale = _quantize_cache(k, v, layout)
+    valid = jnp.array([1, s // 3, s // 2 + 1, s], jnp.int32)
+    got = ops.decode_attention_q8(q, kq, vq, kscale, vscale, valid,
+                                  layout=layout, block_s=block)
+    want = ref.decode_attention_q8_ref(q, kq, vq, kscale, vscale, valid,
+                                       layout=layout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_q8_close_to_fp():
+    """In-kernel dequant attention over a quantized cache stays within
+    int8 round-trip error of full-precision attention."""
+    b, s, h, kv, d = 2, 128, 8, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    k = rand((b, kv, s, d), key=ks[1])
+    v = rand((b, kv, s, d), key=ks[2])
+    kq, vq, kscale, vscale = _quantize_cache(k, v, "bksd")
+    valid = jnp.array([64, 128], jnp.int32)
+    got = np.asarray(ops.decode_attention_q8(q, kq, vq, kscale, vscale,
+                                             valid, layout="bksd"))
+    want = np.asarray(ref.decode_attention_ref(q, k, v, valid,
+                                               layout="bksd"))
+    assert np.abs(got - want).max() < 0.05
+
+
+def test_decode_attention_q8_masks_per_lane():
+    """Stale int8 payloads AND stale scales past each lane's valid
+    prefix must not leak into that lane's output."""
+    b, s, h, kv, d = 3, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, h, d), key=ks[0])
+    k = rand((b, kv, s, d), key=ks[1])
+    v = rand((b, kv, s, d), key=ks[2])
+    kq, vq, kscale, vscale = _quantize_cache(k, v, "bksd")
+    valid = jnp.array([32, 64, 128], jnp.int32)
+    out1 = np.asarray(ops.decode_attention_q8(q, kq, vq, kscale, vscale,
+                                              valid, layout="bksd",
+                                              block_s=32))
+    kq2 = kq.at[0, :, 32:].set(127).at[1, :, 64:].set(-127)
+    vq2 = vq.at[0, :, 32:].set(-127).at[1, :, 64:].set(127)
+    ks2 = kscale.at[0, :, 32:].set(99.0).at[1, :, 64:].set(99.0)
+    vs2 = vscale.at[0, :, 32:].set(99.0).at[1, :, 64:].set(99.0)
+    out2 = np.asarray(ops.decode_attention_q8(q, kq2, vq2, ks2, vs2,
+                                              valid, layout="bksd",
+                                              block_s=32))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # rwkv6 chunked scan
 # ---------------------------------------------------------------------------
 

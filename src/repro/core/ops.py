@@ -485,18 +485,67 @@ def _decode_attn_pallas_q8_b(q, k_cache, v_cache, valid_len, *,
     return out[:, None].astype(q.dtype)
 
 
-def resolve_decode_backend(name: Optional[str],
-                           quantized: bool = False) -> str:
+def _decode_attn_paged_ref_b(q, k_cache, v_cache, valid_len, *,
+                             layout="bksd", page_table=None, interpret=None):
+    """Page pool + per-lane page table: the gather-then-ring jnp oracle."""
+    del interpret
+    from repro.kernels.ref import decode_attention_paged_ref
+    out = decode_attention_paged_ref(q[:, 0], k_cache, v_cache, page_table,
+                                     valid_len, layout=layout)
+    return out[:, None].astype(q.dtype)
+
+
+def _decode_attn_paged_b(q, k_cache, v_cache, valid_len, *, layout="bksd",
+                         page_table=None, interpret=None):
+    """Page pool + per-lane page table: flash-decode with the page table
+    as a second scalar-prefetch operand (index maps do the gather)."""
+    from repro.kernels import ops as kops
+    out = kops.decode_attention_paged(q[:, 0], k_cache, v_cache, page_table,
+                                      valid_len, layout=layout,
+                                      interpret=interpret)
+    return out[:, None].astype(q.dtype)
+
+
+def _decode_attn_paged_ref_q8_b(q, k_cache, v_cache, valid_len, *,
+                                layout="bksd", k_scale=None, v_scale=None,
+                                page_table=None, interpret=None):
+    """Paged int8 pools + per-slot scale pools: the jnp oracle."""
+    del interpret
+    from repro.kernels.ref import decode_attention_paged_q8_ref
+    out = decode_attention_paged_q8_ref(q[:, 0], k_cache, v_cache, k_scale,
+                                        v_scale, page_table, valid_len,
+                                        layout=layout)
+    return out[:, None].astype(q.dtype)
+
+
+def _decode_attn_paged_q8_b(q, k_cache, v_cache, valid_len, *,
+                            layout="bksd", k_scale=None, v_scale=None,
+                            page_table=None, interpret=None):
+    """Paged int8 pools: flash-decode, page-table-indirected scale DMA +
+    in-kernel dequant."""
+    from repro.kernels import ops as kops
+    out = kops.decode_attention_paged_q8(q[:, 0], k_cache, v_cache, k_scale,
+                                         v_scale, page_table, valid_len,
+                                         layout=layout, interpret=interpret)
+    return out[:, None].astype(q.dtype)
+
+
+def resolve_decode_backend(name: Optional[str], quantized: bool = False,
+                           paged: bool = False) -> str:
     """``None``/'auto' -> 'pallas' on TPU (Mosaic kernel), 'ref' elsewhere
     (the interpret-mode kernel would only emulate the block skipping).
 
     ``quantized=True`` (int8 KV cache) maps the base names onto their q8
-    twins — 'ref' -> 'ref_q8', 'pallas' -> 'pallas_q8' — so callers keep
-    selecting implementations by the same two names regardless of the
-    cache dtype."""
+    twins — 'ref' -> 'ref_q8', 'pallas' -> 'pallas_q8'; ``paged=True``
+    (page-pool KV cache) maps onto the paged twins — 'ref' ->
+    'paged_ref', 'pallas' -> 'paged'.  The two compose ('paged_q8' etc.),
+    so callers keep selecting implementations by the same two names
+    regardless of cache dtype OR layout."""
     if name in (None, "auto"):
         name = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if quantized and name in ("ref", "pallas"):
+    if paged and name in ("ref", "pallas"):
+        name = "paged_ref" if name == "ref" else "paged"
+    if quantized and name in ("ref", "pallas", "paged_ref", "paged"):
         name = name + "_q8"
     return name
 
@@ -506,5 +555,9 @@ REGISTRY.register(OpSpec(
     shape=lambda a, s: s,
     backends={"ref": _decode_attn_ref_b, "pallas": _decode_attn_pallas_b,
               "ref_q8": _decode_attn_ref_q8_b,
-              "pallas_q8": _decode_attn_pallas_q8_b},
+              "pallas_q8": _decode_attn_pallas_q8_b,
+              "paged_ref": _decode_attn_paged_ref_b,
+              "paged": _decode_attn_paged_b,
+              "paged_ref_q8": _decode_attn_paged_ref_q8_b,
+              "paged_q8": _decode_attn_paged_q8_b},
 ))

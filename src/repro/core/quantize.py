@@ -104,17 +104,29 @@ def dequantize_tree(params, dtype=jnp.float32):
         params, is_leaf=lambda x: isinstance(x, QTensor))
 
 
+def _leaf_bytes(x) -> int:
+    if isinstance(x, QTensor):
+        return (x.q.size * x.q.dtype.itemsize
+                + x.scale.size * x.scale.dtype.itemsize)
+    if isinstance(x, (jax.Array, np.ndarray)):
+        return x.size * x.dtype.itemsize
+    return 0                       # None / Python scalars carry no storage
+
+
 def tree_bytes(params) -> int:
     """Total storage bytes of a tree, counting BOTH the int8 payload and
     the scale arrays of every QTensor (at their actual itemsizes — a
-    future fp16-scale QTensor is counted correctly, not assumed fp32)."""
-    def nbytes(x):
-        if isinstance(x, QTensor):
-            return (x.q.size * x.q.dtype.itemsize
-                    + x.scale.size * x.scale.dtype.itemsize)
-        return x.size * x.dtype.itemsize
+    future fp16-scale QTensor is counted correctly, not assumed fp32).
+
+    Every other array leaf is counted at its actual dtype — including
+    the paged KV cache's int32 ``page_table`` and the host-side
+    refcount array when a cache tree (or ``{**cache, "refcount": ...}``)
+    is passed in.  Bookkeeping arrays belong in the denominator of any
+    compression claim: dropping them would overstate how small the
+    paged/quantized cache really is.  Non-array leaves count zero.
+    """
     return int(sum(jax.tree.leaves(jax.tree.map(
-        nbytes, params, is_leaf=lambda x: isinstance(x, QTensor)))))
+        _leaf_bytes, params, is_leaf=lambda x: isinstance(x, QTensor)))))
 
 
 def compression_ratio(params) -> float:
@@ -122,10 +134,13 @@ def compression_ratio(params) -> float:
 
     The denominator is :func:`tree_bytes`, which includes QTensor scale
     arrays — excluding them would overstate the ratio by ~``D/(D+4)``
-    per ``(D,)``-channel tensor.
+    per ``(D,)``-channel tensor.  Non-QTensor leaves (bf16 passthrough
+    weights, int32 page-table/refcount bookkeeping) count the same bytes
+    on both sides, so overhead arrays dilute the ratio toward 1 instead
+    of silently vanishing from it.
     """
     orig = int(sum(4 * l.q.size if isinstance(l, QTensor)
-                   else l.size * l.dtype.itemsize
+                   else _leaf_bytes(l)
                    for l in jax.tree.leaves(
                        params, is_leaf=lambda x: isinstance(x, QTensor))))
     return orig / max(tree_bytes(params), 1)

@@ -43,6 +43,24 @@ Layouts: ``bskd`` (k/v ``(B, S, KV, D)`` — the historical kernel-bench
 layout; scales ``(B, S, KV)``) and ``bksd`` (``(B, KV, S, D)`` — the
 serving ring-cache layout, consumed without any transpose; scales
 ``(B, KV, S)``).
+
+Paged caches (PR 7): :func:`decode_attention_paged` reads K/V from a
+global page POOL instead of per-lane rings.  The pool drops the batch
+axis — ``(P, KV, ps, D)`` ('bksd') or ``(P, ps, KV, D)`` ('bskd') — and
+each lane owns a row of an int32 ``page_table`` ``(B, W)`` mapping its
+logical page ``j`` to a physical pool page.  The page table rides in as
+a SECOND scalar-prefetch operand, so the only change versus the ring
+kernel is one extra indirection inside the K/V index maps:
+
+    ring :  block  si  of lane bi  ->  k[bi, :, clamp(si), :]
+    paged:  block  si  of lane bi  ->  k_pool[pt[bi, clamp(si)], :, :, :]
+
+The page size IS the KV block size (one grid step = one page), so the
+ragged machinery composes unchanged: the clamp pins out-of-prefix steps
+to the lane's last useful PAGE (revisited index -> the pipeline skips
+the HBM->VMEM copy) and ``@pl.when`` skips their flops.  Physical pages
+may be arbitrarily scattered/fragmented in the pool — the index map is
+the gather.  The q8 twin indirects the scale pools the same way.
 """
 from __future__ import annotations
 
@@ -196,6 +214,109 @@ def decode_attention(q, k, v, valid_len, *, layout: str = "bskd",
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, g, d),
                                    lambda bi, ki, si, vr: (bi, ki, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d),
+                                       jnp.float32 if quantized else q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def _paged_kernel(valid_ref, pt_ref, *args, **kw):
+    """Paged twin of :func:`_decode_kernel`: the page table is consumed
+    entirely by the index maps, so the body is the ring kernel's —
+    only the leading scalar-prefetch ref is skipped."""
+    del pt_ref
+    _decode_kernel(valid_ref, *args, **kw)
+
+
+def decode_attention_paged(q, k, v, page_table, valid_len, *,
+                           layout: str = "bskd", interpret: bool = False,
+                           k_scale=None, v_scale=None):
+    """Flash-decode against a paged KV pool.
+
+    q: (B, H, D); k, v: page pools — (P, ps, KV, D) for ``layout='bskd'``
+    or (P, KV, ps, D) for ``layout='bksd'`` (``P`` physical pages of
+    ``ps`` sequence slots); page_table: (B, W) int32 mapping each lane's
+    logical page j to a pool page (logical position ``t`` of lane ``b``
+    lives at ``k[page_table[b, t // ps], ..., t % ps, ...]``); valid_len:
+    scalar or per-lane (B,) count of valid logical slots.
+
+    With ``k_scale``/``v_scale`` ((P, ps, KV) / (P, KV, ps) fp32 scale
+    pools) the payload pools are int8, dequantized per slot inside the
+    block loop exactly as in the ring kernel.
+
+    The block size is the page size, so every lane reads exactly
+    ``ceil(valid_len / ps)`` pages — fragmentation in the pool costs
+    nothing (the index map IS the gather) and pages beyond the prefix
+    are skipped by the same clamp + ``pl.when`` early exit as the ring
+    path.
+    """
+    quantized = k_scale is not None
+    if quantized:
+        assert v_scale is not None
+    b, h, d = q.shape
+    if layout == "bskd":
+        ps, kvh = k.shape[1], k.shape[2]
+    else:
+        assert layout == "bksd", layout
+        kvh, ps = k.shape[1], k.shape[2]
+    w = page_table.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+    valid = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+    pt = page_table.astype(jnp.int32)
+
+    def _page(si, valid_ref, pt_ref, bi):
+        # clamp to the lane's last useful LOGICAL page, then translate to
+        # the physical pool page — revisited physical indices make the
+        # pipeline skip the copy, exactly as the ring clamp does
+        last = jnp.maximum(pl.cdiv(valid_ref[bi], ps) - 1, 0)
+        return pt_ref[bi, jnp.minimum(si, last)]
+
+    if layout == "bskd":
+        kv_spec = pl.BlockSpec(
+            (1, ps, 1, d),
+            lambda bi, ki, si, vr, pr: (_page(si, vr, pr, bi), 0, ki, 0))
+        sc_spec = pl.BlockSpec(
+            (1, ps, 1),
+            lambda bi, ki, si, vr, pr: (_page(si, vr, pr, bi), 0, ki))
+    else:
+        kv_spec = pl.BlockSpec(
+            (1, 1, ps, d),
+            lambda bi, ki, si, vr, pr: (_page(si, vr, pr, bi), ki, 0, 0))
+        sc_spec = pl.BlockSpec(
+            (1, 1, ps),
+            lambda bi, ki, si, vr, pr: (_page(si, vr, pr, bi), ki, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, ki, si, vr, pr: (bi, ki, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [valid, pt, qg, k, v]
+    if quantized:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, bs=ps, ns=w,
+                          kv_major=(layout == "bksd"), quantized=quantized),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kvh, w),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, ki, si, vr, pr: (bi, ki, 0, 0)),
             scratch_shapes=[
                 pltpu.VMEM((g, 1), jnp.float32),
                 pltpu.VMEM((g, 1), jnp.float32),

@@ -113,6 +113,28 @@ def decode_attention_q8(q, k, v, k_scale, v_scale, valid_len, *,
                                 interpret=_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def decode_attention_paged(q, k, v, page_table, valid_len, *,
+                           layout="bskd", interpret=None):
+    """Paged flash-decode: K/V live in a global page pool, each lane's
+    int32 page-table row supplies the physical page per KV block (block
+    size = page size)."""
+    return _da.decode_attention_paged(q, k, v, page_table, valid_len,
+                                      layout=layout,
+                                      interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def decode_attention_paged_q8(q, k, v, k_scale, v_scale, page_table,
+                              valid_len, *, layout="bskd", interpret=None):
+    """Paged int8 flash-decode: page-table indirection over int8 payload
+    pools AND their per-slot fp32 scale pools, dequant in the block loop."""
+    return _da.decode_attention_paged(q, k, v, page_table, valid_len,
+                                      layout=layout, k_scale=k_scale,
+                                      v_scale=v_scale,
+                                      interpret=_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_chunked(r, k, v, w, u, *, chunk=16, interpret=None):
     t = r.shape[1]

@@ -109,6 +109,48 @@ def decode_attention_q8_ref(q, k_q, v_q, k_scale, v_scale, valid_len, *,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_gather(pool, page_table, *, layout="bksd"):
+    """Gather a lane-major ring-equivalent cache out of a page pool.
+
+    pool: (P, KV, ps, D) ('bksd') or (P, ps, KV, D) ('bskd') payloads —
+    or the scale pools (P, KV, ps) / (P, ps, KV); page_table: (B, W)
+    int32.  Returns the (B, KV, W*ps, D)-shaped (resp. (B, W*ps, KV, D),
+    and the scale analogues) array in which lane b's logical slot t is
+    ``pool[page_table[b, t // ps]][..., t % ps, ...]`` — a pure memory
+    reorder, so any ring-cache oracle applied to the gather is
+    bit-identical to true paged attention.
+    """
+    g = pool[page_table]                # (B, W, *page_shape)
+    b, w = g.shape[:2]
+    if layout == "bskd":                # page (ps, KV[, D]) — seq leads
+        return g.reshape(b, w * g.shape[2], *g.shape[3:])
+    assert layout == "bksd", layout     # page (KV, ps[, D]) — seq 2nd
+    g = jnp.moveaxis(g, 1, 2)           # (B, KV, W, ps[, D])
+    return g.reshape(b, g.shape[1], w * g.shape[3], *g.shape[4:])
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, page_table, valid_len, *,
+                               layout="bksd"):
+    """Paged decode oracle: gather pages into the equivalent ring layout
+    and reuse the ragged ring oracle.  q: (B, H, D); pools as in
+    :func:`paged_gather`; valid_len counts LOGICAL slots (< W*ps)."""
+    k = paged_gather(k_pool, page_table, layout=layout)
+    v = paged_gather(v_pool, page_table, layout=layout)
+    return decode_attention_ref(q, k, v, valid_len, layout=layout)
+
+
+def decode_attention_paged_q8_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                  page_table, valid_len, *, layout="bksd"):
+    """Paged int8 decode oracle: gather payload AND per-slot scale pools
+    through the page table, then reuse the ragged q8 ring oracle."""
+    k = paged_gather(k_pool, page_table, layout=layout)
+    v = paged_gather(v_pool, page_table, layout=layout)
+    ks = paged_gather(k_scale, page_table, layout=layout)
+    vs = paged_gather(v_scale, page_table, layout=layout)
+    return decode_attention_q8_ref(q, k, v, ks, vs, valid_len,
+                                   layout=layout)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q: (B, S, H, D); k, v: (B, S, KV, D) — full-sequence attention."""
     from repro.models.common import attention_full

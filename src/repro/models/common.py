@@ -398,10 +398,76 @@ def cache_valid_len(pos, cache_size):
     return jnp.minimum(pos + 1, cache_size)
 
 
+def _paged_slot(page_table, pos, page_size):
+    """Resolve per-lane write coordinates in a page pool.
+
+    ``pos`` (B,) absolute positions wrap at the lane's logical capacity
+    ``W * page_size`` (mirroring the ring cache's ``pos %% S``), then
+    split into (physical page via the lane's table row, offset in page).
+    """
+    w = page_table.shape[1]
+    p = jnp.mod(pos, w * page_size)
+    rows = jnp.arange(page_table.shape[0])
+    phys = page_table[rows, p // page_size]            # (B,) pool pages
+    return phys, p % page_size
+
+
+def cache_write_batch_paged(pool_k, pool_v, page_table, k_new, v_new, pos,
+                            seq_axis: int = 2):
+    """Per-lane one-token write into a paged KV pool.
+
+    ``pool_k``/``pool_v``: (P, KV, ps, D) for ``seq_axis=2`` (the bksd
+    pool) or (P, ps, KV, D) for ``seq_axis=1`` (bskd); ``page_table``:
+    (B, W) int32; ``k_new``/``v_new``: (B, KV, 1, D) / (B, 1, KV, D) as
+    in :func:`cache_write_batch`.  The allocator guarantees every ACTIVE
+    lane's current page is exclusively owned (copy-on-write happens
+    host-side before the step), so the scatter cannot collide; inactive
+    lanes' table rows are all zeros and land in the reserved garbage
+    page 0.
+    """
+    ps = pool_k.shape[seq_axis]
+    phys, off = _paged_slot(page_table, pos, ps)
+    if seq_axis == 2:
+        pool_k = pool_k.at[phys, :, off].set(k_new[:, :, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, :, off].set(v_new[:, :, 0].astype(pool_v.dtype))
+    else:
+        assert seq_axis == 1, seq_axis
+        pool_k = pool_k.at[phys, off].set(k_new[:, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, off].set(v_new[:, 0].astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def cache_write_batch_paged_q8(pool_k, pool_v, scale_k, scale_v, page_table,
+                               k_new, v_new, pos, seq_axis: int = 2):
+    """Quantizing paged write: int8 payload pools (P, KV, ps, D) /
+    (P, ps, KV, D) plus per-slot fp32 scale pools (P, KV, ps) /
+    (P, ps, KV) — the paged analogue of :func:`cache_write_batch_q8`,
+    same per-(lane, head, slot) scale semantics."""
+    from repro.core.quantize import quantize_into
+    ps = pool_k.shape[seq_axis]
+    phys, off = _paged_slot(page_table, pos, ps)
+    if seq_axis == 2:
+        kq, ks = quantize_into(k_new[:, :, 0], axis=-1)    # (B,KV,D),(B,KV)
+        vq, vs = quantize_into(v_new[:, :, 0], axis=-1)
+        pool_k = pool_k.at[phys, :, off].set(kq)
+        pool_v = pool_v.at[phys, :, off].set(vq)
+        scale_k = scale_k.at[phys, :, off].set(ks)
+        scale_v = scale_v.at[phys, :, off].set(vs)
+    else:
+        assert seq_axis == 1, seq_axis
+        kq, ks = quantize_into(k_new[:, 0], axis=-1)
+        vq, vs = quantize_into(v_new[:, 0], axis=-1)
+        pool_k = pool_k.at[phys, off].set(kq)
+        pool_v = pool_v.at[phys, off].set(vq)
+        scale_k = scale_k.at[phys, off].set(ks)
+        scale_v = scale_v.at[phys, off].set(vs)
+    return pool_k, pool_v, scale_k, scale_v
+
+
 def decode_attention_named(q, k_cache, v_cache, valid_len, *,
                            layout: str = "bksd",
                            backend: Optional[str] = None,
-                           k_scale=None, v_scale=None):
+                           k_scale=None, v_scale=None, page_table=None):
     """Decode attention through the op-registry named-backend mechanism.
 
     ``backend`` is a registry backend name — 'ref' (the jnp
@@ -412,16 +478,22 @@ def decode_attention_named(q, k_cache, v_cache, valid_len, *,
 
     Passing ``k_scale``/``v_scale`` marks the cache as int8 + per-slot
     scales and resolves the q8 twins of the same backend names
-    ('ref_q8' oracle | 'pallas_q8' in-kernel dequant).
+    ('ref_q8' oracle | 'pallas_q8' in-kernel dequant).  Passing
+    ``page_table`` marks ``k_cache``/``v_cache`` (and the scales) as
+    page POOLS and resolves the paged twins ('paged_ref' | 'paged');
+    both markers compose ('paged_ref_q8' | 'paged_q8').
     """
     from repro.core.ops import REGISTRY, resolve_decode_backend
     quantized = k_scale is not None
+    paged = page_table is not None
     fn = REGISTRY.op("decode_attention").backend(
-        resolve_decode_backend(backend, quantized=quantized))
+        resolve_decode_backend(backend, quantized=quantized, paged=paged))
+    kw = {}
     if quantized:
-        return fn(q, k_cache, v_cache, valid_len, layout=layout,
-                  k_scale=k_scale, v_scale=v_scale)
-    return fn(q, k_cache, v_cache, valid_len, layout=layout)
+        kw.update(k_scale=k_scale, v_scale=v_scale)
+    if paged:
+        kw.update(page_table=page_table)
+    return fn(q, k_cache, v_cache, valid_len, layout=layout, **kw)
 
 
 # ---------------------------------------------------------------------------

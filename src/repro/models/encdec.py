@@ -155,22 +155,79 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, kv_dtype=None):
+               dtype=jnp.bfloat16, kv_dtype=None, page_size=None,
+               num_pages=None):
     L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
     se = cfg.encoder_seq
     kvd = tfm.kv_cache_dtype(dtype, kv_dtype)
     xd = jnp.bfloat16 if kv_dtype == "bf16" else dtype
     cache = {
-        "k": jnp.zeros((L, batch, cache_len, kv, hd), kvd),
-        "v": jnp.zeros((L, batch, cache_len, kv, hd), kvd),
         "xk": jnp.zeros((L, batch, se, kv, hd), xd),
         "xv": jnp.zeros((L, batch, se, kv, hd), xd),
     }
+    if page_size is None:
+        cache["k"] = jnp.zeros((L, batch, cache_len, kv, hd), kvd)
+        cache["v"] = jnp.zeros((L, batch, cache_len, kv, hd), kvd)
+        if kv_dtype == "int8":
+            # bskd layout -> per-slot scales indexed (L, B, S, KV)
+            cache["k_scale"] = jnp.zeros((L, batch, cache_len, kv),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((L, batch, cache_len, kv),
+                                         jnp.float32)
+        return cache
+    # paged decoder self-attention; xk/xv (cross-attention, written once
+    # at admission) stay dense per-lane.  bskd pages: (L, P, ps, KV, D).
+    ps = page_size
+    w = -(-cache_len // ps)
+    p = num_pages if num_pages is not None else 1 + batch * w
+    cache["k_pages"] = jnp.zeros((L, p, ps, kv, hd), kvd)
+    cache["v_pages"] = jnp.zeros((L, p, ps, kv, hd), kvd)
+    cache["page_table"] = jnp.zeros((batch, w), jnp.int32)
     if kv_dtype == "int8":
-        # bskd layout -> per-slot scales indexed (L, B, S, KV)
-        cache["k_scale"] = jnp.zeros((L, batch, cache_len, kv), jnp.float32)
-        cache["v_scale"] = jnp.zeros((L, batch, cache_len, kv), jnp.float32)
+        cache["k_scale_pages"] = jnp.zeros((L, p, ps, kv), jnp.float32)
+        cache["v_scale_pages"] = jnp.zeros((L, p, ps, kv), jnp.float32)
     return cache
+
+
+def paged_info(cfg: ArchConfig, cache_len: int, page_size: int):
+    """Incremental paging of the decoder self-attention ring; prefix
+    sharing is OFF — the dense per-lane cross-attention caches (xk/xv)
+    are lane state the prefix cache cannot share, so a 'hit' would still
+    need a full encoder pass."""
+    w = -(-cache_len // page_size)
+    return {"pages_per_lane": w, "capacity": w * page_size,
+            "alloc": "incremental", "prefix_sharing": False}
+
+
+def cache_splice_paged(cfg: ArchConfig, cache, row, slot, pages,
+                       page_size: int):
+    """Splice a prefilled B=1 cache into lane ``slot``: dense xk/xv land
+    in the lane row; the first ``len(pages)`` self-attention KV blocks
+    scatter into the given pages (bskd pages reshape directly — the seq
+    axis already leads)."""
+    n = pages.shape[0]
+    ps = page_size
+    w = cache["page_table"].shape[1]
+    out = dict(cache)
+    out["xk"] = cache["xk"].at[:, slot].set(
+        row["xk"][:, 0].astype(cache["xk"].dtype))
+    out["xv"] = cache["xv"].at[:, slot].set(
+        row["xv"][:, 0].astype(cache["xv"].dtype))
+    for key in ("k", "v"):
+        src = row[key][:, 0, :n * ps]                  # (L, n*ps, KV, D)
+        L = src.shape[0]
+        x = src.reshape(L, n, ps, *src.shape[2:])
+        pool = cache[key + "_pages"]
+        out[key + "_pages"] = pool.at[:, pages].set(x.astype(pool.dtype))
+        skey = key + "_scale"
+        if skey in row:
+            ssrc = row[skey][:, 0, :n * ps]            # (L, n*ps, KV)
+            sx = ssrc.reshape(L, n, ps, ssrc.shape[2])
+            spool = cache[skey + "_pages"]
+            out[skey + "_pages"] = spool.at[:, pages].set(sx)
+    trow = jnp.zeros((w,), jnp.int32).at[:n].set(pages.astype(jnp.int32))
+    out["page_table"] = cache["page_table"].at[slot].set(trow)
+    return out
 
 
 def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
@@ -239,11 +296,22 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
     """Lane-major decode: token (B, 1); pos (B,) per-lane positions.
     Self-attention goes through the ragged named-backend decode path
     (per-lane RoPE + ring writes, bskd cache layout); cross-attention
-    keys are the full encoder output, identical for every lane."""
+    keys are the full encoder output, identical for every lane.  A paged
+    cache (``page_table`` leaf) pages only the self-attention ring —
+    xk/xv stay dense per-lane."""
     x = params["embed"][token]                         # (B,1,d)
     hd = cfg.resolved_head_dim
     b = x.shape[0]
-    quantized = "k_scale" in cache
+    paged = "page_table" in cache
+    pt = cache.get("page_table")
+    kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
+    ksk, vsk = ("k_scale_pages", "v_scale_pages") if paged \
+        else ("k_scale", "v_scale")
+    quantized = ksk in cache
+    if paged:
+        cap = pt.shape[1] * cache[kk].shape[2]         # W * ps logical
+    else:
+        cap = cache[kk].shape[2]
 
     def self_attn(lp, x, ck, cv, cks=None, cvs=None):
         xn = _ln(x, lp, "ln")
@@ -251,17 +319,27 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
         posv = pos[:, None]
         q = cm.apply_rope(q, posv, cfg.rope_theta)
         k = cm.apply_rope(k, posv, cfg.rope_theta)
-        valid = cm.cache_valid_len(pos, ck.shape[1])
+        valid = cm.cache_valid_len(pos, cap)
         if cks is None:
-            ck, cv = cm.cache_write_batch(ck, cv, k, v, pos, seq_axis=1)
-            a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
-                                          backend=attn_backend)
-        else:
-            ck, cv, cks, cvs = cm.cache_write_batch_q8(
-                ck, cv, cks, cvs, k, v, pos, seq_axis=1)
+            if paged:
+                ck, cv = cm.cache_write_batch_paged(ck, cv, pt, k, v, pos,
+                                                    seq_axis=1)
+            else:
+                ck, cv = cm.cache_write_batch(ck, cv, k, v, pos, seq_axis=1)
             a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
                                           backend=attn_backend,
-                                          k_scale=cks, v_scale=cvs)
+                                          page_table=pt)
+        else:
+            if paged:
+                ck, cv, cks, cvs = cm.cache_write_batch_paged_q8(
+                    ck, cv, cks, cvs, pt, k, v, pos, seq_axis=1)
+            else:
+                ck, cv, cks, cvs = cm.cache_write_batch_q8(
+                    ck, cv, cks, cvs, k, v, pos, seq_axis=1)
+            a = cm.decode_attention_named(q, ck, cv, valid, layout="bskd",
+                                          backend=attn_backend,
+                                          k_scale=cks, v_scale=cvs,
+                                          page_table=pt)
         x = x + (a.reshape(b, 1, cfg.q_dim) @ lp["wo"] + lp["bo"])
         return x, ck, cv, cks, cvs
 
@@ -279,10 +357,10 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
             return rest(lp, x, xk, xv), (ck, cv, cks, cvs)
 
         x, (ck, cv, cks, cvs) = lax.scan(
-            layer, x, (params["dec"], cache["k"], cache["v"],
-                       cache["k_scale"], cache["v_scale"], cache["xk"],
+            layer, x, (params["dec"], cache[kk], cache[vk],
+                       cache[ksk], cache[vsk], cache["xk"],
                        cache["xv"]))
-        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+        new_cache = {kk: ck, vk: cv, ksk: cks, vsk: cvs,
                      "xk": cache["xk"], "xv": cache["xv"]}
     else:
         def layer(x, scanned):
@@ -291,9 +369,11 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
             return rest(lp, x, xk, xv), (ck, cv)
 
         x, (ck, cv) = lax.scan(
-            layer, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+            layer, x, (params["dec"], cache[kk], cache[vk], cache["xk"],
                        cache["xv"]))
-        new_cache = {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+        new_cache = {kk: ck, vk: cv, "xk": cache["xk"], "xv": cache["xv"]}
+    if paged:
+        new_cache["page_table"] = pt
     x = cm.layer_norm(x, params["final_ln_w"], params["final_ln_b"])
     logits = x @ params["embed"].T.astype(x.dtype)
     return logits, new_cache

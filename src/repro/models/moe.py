@@ -312,6 +312,8 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 init_cache = tfm.init_cache
 cache_spec = tfm.cache_spec
 cache_to_kv_dtype = tfm.cache_to_kv_dtype
+cache_splice_paged = tfm.cache_splice_paged
+paged_info = tfm.paged_info
 
 
 def decode_step(cfg: ArchConfig, params, token, cache, pos, *,
@@ -337,8 +339,13 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
     transformer.decode_step_batch).  The MoE block routes all B lane
     tokens through one dispatch instead of B single-token dispatches.
     An int8 cache (``k_scale`` leaf) takes the quantizing-write + q8
-    attention path, same as the dense transformer."""
+    attention path, same as the dense transformer; a paged cache
+    (``page_table`` leaf) streams page pools through the scan."""
     x = tfm._embed(cfg, params, tokens)
+    if "page_table" in cache:
+        return _decode_step_batch_paged(cfg, params, x, cache, pos,
+                                        window=window,
+                                        attn_backend=attn_backend)
     quantized = "k_scale" in cache
 
     if quantized:
@@ -370,6 +377,47 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
     x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k"],
                                       cache["v"]))
     return tfm._logits(cfg, params, x), {"k": ck, "v": cv}
+
+
+def _decode_step_batch_paged(cfg: ArchConfig, params, x, cache, pos, *,
+                             window: int = 0, attn_backend=None):
+    """Paged scan bodies (see transformer._decode_step_batch_paged) with
+    the MoE block in place of the dense MLP."""
+    pt = cache["page_table"]
+    quantized = "k_scale_pages" in cache
+
+    if quantized:
+        def layer(x, scanned):
+            lp, ck, cv, cks, cvs = scanned
+            a, ck, cv, cks, cvs = tfm.attn_decode_batch(
+                cfg, lp, x, ck, cv, pos, window=window,
+                backend=attn_backend, cks=cks, cvs=cvs, page_table=pt)
+            x = x + a
+            m, _ = _moe_block(cfg, lp, x)
+            return x + m, (ck, cv, cks, cvs)
+
+        x, (ck, cv, cks, cvs) = lax.scan(
+            layer, x, (params["layers"], cache["k_pages"],
+                       cache["v_pages"], cache["k_scale_pages"],
+                       cache["v_scale_pages"]))
+        return tfm._logits(cfg, params, x), {
+            "k_pages": ck, "v_pages": cv, "k_scale_pages": cks,
+            "v_scale_pages": cvs, "page_table": pt}
+
+    def layer(x, scanned):
+        lp, ck, cv = scanned
+        a, ck, cv = tfm.attn_decode_batch(cfg, lp, x, ck, cv, pos,
+                                          window=window,
+                                          backend=attn_backend,
+                                          page_table=pt)
+        x = x + a
+        m, _ = _moe_block(cfg, lp, x)
+        return x + m, (ck, cv)
+
+    x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k_pages"],
+                                      cache["v_pages"]))
+    return tfm._logits(cfg, params, x), {"k_pages": ck, "v_pages": cv,
+                                         "page_table": pt}
 
 
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,

@@ -204,7 +204,8 @@ def loss_fn(cfg: ArchConfig, params, batch, *, window: int = 0):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, kv_dtype=None):
+               dtype=jnp.bfloat16, kv_dtype=None, page_size=None,
+               num_pages=None):
     n_rec, n_attn = _counts(cfg)
     w = cfg.lru_width or cfg.d_model
     wlen = min(cache_len, cfg.local_window)
@@ -213,13 +214,76 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
     cache = {
         "h": jnp.zeros((n_rec, batch, w), jnp.float32),
         "conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dtype),
-        "k": jnp.zeros((n_attn, batch, kv, wlen, hd), kvd),
-        "v": jnp.zeros((n_attn, batch, kv, wlen, hd), kvd),
     }
+    if page_size is None:
+        cache["k"] = jnp.zeros((n_attn, batch, kv, wlen, hd), kvd)
+        cache["v"] = jnp.zeros((n_attn, batch, kv, wlen, hd), kvd)
+        if kv_dtype == "int8":
+            cache["k_scale"] = jnp.zeros((n_attn, batch, kv, wlen),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((n_attn, batch, kv, wlen),
+                                         jnp.float32)
+        return cache
+    # paged local-attention windows: the recurrent h/conv state stays
+    # dense per-lane (it IS the recurrence, one slot per lane)
+    ps = page_size
+    if wlen % ps:
+        raise ValueError(f"page_size {ps} must divide attention window "
+                         f"{wlen} for the rglru family")
+    wp = wlen // ps
+    p = num_pages if num_pages is not None else 1 + batch * wp
+    cache["k_pages"] = jnp.zeros((n_attn, p, kv, ps, hd), kvd)
+    cache["v_pages"] = jnp.zeros((n_attn, p, kv, ps, hd), kvd)
+    cache["page_table"] = jnp.zeros((batch, wp), jnp.int32)
     if kv_dtype == "int8":
-        cache["k_scale"] = jnp.zeros((n_attn, batch, kv, wlen), jnp.float32)
-        cache["v_scale"] = jnp.zeros((n_attn, batch, kv, wlen), jnp.float32)
+        cache["k_scale_pages"] = jnp.zeros((n_attn, p, kv, ps), jnp.float32)
+        cache["v_scale_pages"] = jnp.zeros((n_attn, p, kv, ps), jnp.float32)
     return cache
+
+
+def paged_info(cfg: ArchConfig, cache_len: int, page_size: int):
+    """Windowed attention pages: every lane owns its full window for its
+    whole lifetime (the ring wraps, so pages are perpetually rewritten)
+    — allocation is up-front ('full') and prefix sharing is off (a
+    shared page would be COW-split on the first wrap anyway)."""
+    wlen = min(cache_len, cfg.local_window)
+    if wlen % page_size:
+        raise ValueError(f"page_size {page_size} must divide attention "
+                         f"window {wlen} for the rglru family")
+    wp = wlen // page_size
+    return {"pages_per_lane": wp, "capacity": wlen, "alloc": "full",
+            "prefix_sharing": False}
+
+
+def cache_splice_paged(cfg: ArchConfig, cache, row, slot, pages,
+                       page_size: int):
+    """Splice a prefilled B=1 cache into lane ``slot``: dense h/conv
+    state lands in the lane row; the window KV ring is scattered across
+    the lane's ``pages`` (length == pages_per_lane — full allocation, the
+    ring-wrap alignment of the source is preserved because paged writes
+    also wrap at W * ps == wlen)."""
+    n = pages.shape[0]
+    ps = page_size
+    assert n == cache["page_table"].shape[1], (n, cache["page_table"].shape)
+    out = dict(cache)
+    out["h"] = cache["h"].at[:, slot].set(row["h"][:, 0])
+    out["conv"] = cache["conv"].at[:, slot].set(
+        row["conv"][:, 0].astype(cache["conv"].dtype))
+    for key in ("k", "v"):
+        src = row[key][:, 0]                       # (n_attn, KV, wlen, D)
+        na, kv = src.shape[0], src.shape[1]
+        x = src.reshape(na, kv, n, ps, -1).transpose(0, 2, 1, 3, 4)
+        pool = cache[key + "_pages"]
+        out[key + "_pages"] = pool.at[:, pages].set(x.astype(pool.dtype))
+        skey = key + "_scale"
+        if skey in row:
+            ssrc = row[skey][:, 0]                 # (n_attn, KV, wlen)
+            sx = ssrc.reshape(na, kv, n, ps).transpose(0, 2, 1, 3)
+            spool = cache[skey + "_pages"]
+            out[skey + "_pages"] = spool.at[:, pages].set(sx)
+    out["page_table"] = cache["page_table"].at[slot].set(
+        pages.astype(jnp.int32))
+    return out
 
 
 def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
@@ -298,11 +362,17 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
     """Lane-major decode: token (B, 1); pos (B,) per-lane.  Recurrent
     blocks are already batched; the local-attention layers switch to the
     fused ragged decode attention (per-lane RoPE positions + ring
-    writes)."""
+    writes).  A paged cache (``page_table`` leaf) indexes per-layer page
+    POOLS with one shared lane page table instead of ring rows."""
     del window
     x = params["embed"][token[:, 0]]
     kinds = layer_kinds(cfg)
-    quantized = "k_scale" in cache
+    paged = "page_table" in cache
+    kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
+    ksk, vsk = ("k_scale_pages", "v_scale_pages") if paged \
+        else ("k_scale", "v_scale")
+    pt = cache.get("page_table")
+    quantized = ksk in cache
     hs, convs, ks, vs, kss, vss = [], [], [], [], [], []
     ri = ai = 0
     for li, kind in enumerate(kinds):
@@ -318,15 +388,17 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
             lp = _slice(params["attn"], ai)
             if quantized:
                 a, ck, cv, cks, cvs = tfm.attn_decode_batch(
-                    cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai],
+                    cfg, lp, x[:, None], cache[kk][ai], cache[vk][ai],
                     pos, window=cfg.local_window, backend=attn_backend,
-                    cks=cache["k_scale"][ai], cvs=cache["v_scale"][ai])
+                    cks=cache[ksk][ai], cvs=cache[vsk][ai],
+                    page_table=pt)
                 kss.append(cks)
                 vss.append(cvs)
             else:
                 a, ck, cv = tfm.attn_decode_batch(
-                    cfg, lp, x[:, None], cache["k"][ai], cache["v"][ai],
-                    pos, window=cfg.local_window, backend=attn_backend)
+                    cfg, lp, x[:, None], cache[kk][ai], cache[vk][ai],
+                    pos, window=cfg.local_window, backend=attn_backend,
+                    page_table=pt)
             ks.append(ck)
             vs.append(cv)
             ai += 1
@@ -336,11 +408,13 @@ def decode_step_batch(cfg: ArchConfig, params, token, cache, pos, *,
     logits = (x @ params["unembed"])[:, None]
     new_cache = {
         "h": jnp.stack(hs), "conv": jnp.stack(convs),
-        "k": jnp.stack(ks), "v": jnp.stack(vs),
+        kk: jnp.stack(ks), vk: jnp.stack(vs),
     }
+    if paged:
+        new_cache["page_table"] = pt
     if quantized:
-        new_cache["k_scale"] = jnp.stack(kss)
-        new_cache["v_scale"] = jnp.stack(vss)
+        new_cache[ksk] = jnp.stack(kss)
+        new_cache[vsk] = jnp.stack(vss)
     return logits, new_cache
 
 

@@ -123,7 +123,8 @@ def attn_decode(cfg: ArchConfig, lp, x, ck, cv, pos, *, window: int = 0):
 
 
 def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
-                      window: int = 0, backend=None, cks=None, cvs=None):
+                      window: int = 0, backend=None, cks=None, cvs=None,
+                      page_table=None):
     """Lane-major ragged decode attention: x (B, 1, d); caches
     (B, KV, S, D); pos (B,) per-lane absolute positions.
 
@@ -136,10 +137,19 @@ def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
     is int8: the new token is quantized on write and attention resolves
     the q8 backend twins (in-kernel dequant).  Returns
     ``(out, ck, cv)`` in float mode, ``(out, ck, cv, cks, cvs)`` in q8
-    mode."""
+    mode.
+
+    With ``page_table`` ((B, W) int32) the caches are global page POOLS
+    — (P, KV, ps, D) payloads, (P, KV, ps) scales — and both the write
+    and the attention indirect through the lane's table row (paged
+    backend twins); logical capacity becomes W * ps per lane."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
-    cache_size = ck.shape[2]
+    paged = page_table is not None
+    if paged:
+        cache_size = page_table.shape[1] * ck.shape[2]  # W * ps logical
+    else:
+        cache_size = ck.shape[2]
     xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
     q = (xn @ lp["wq"]).reshape(b, 1, cfg.num_heads, hd)
     k = (xn @ lp["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
@@ -153,16 +163,25 @@ def attn_decode_batch(cfg: ArchConfig, lp, x, ck, cv, pos, *,
     kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
     valid = cm.cache_valid_len(pos, cache_size)        # (B,) ragged
     if cks is None:
-        ck, cv = cm.cache_write_batch(ck, cv, kT, vT, pos, seq_axis=2)
+        if paged:
+            ck, cv = cm.cache_write_batch_paged(ck, cv, page_table, kT, vT,
+                                                pos, seq_axis=2)
+        else:
+            ck, cv = cm.cache_write_batch(ck, cv, kT, vT, pos, seq_axis=2)
         out = cm.decode_attention_named(q, ck, cv, valid, layout="bksd",
-                                        backend=backend)
+                                        backend=backend,
+                                        page_table=page_table)
         out = out.reshape(b, 1, cfg.q_dim)
         return out @ lp["wo"], ck, cv
-    ck, cv, cks, cvs = cm.cache_write_batch_q8(ck, cv, cks, cvs, kT, vT,
-                                               pos, seq_axis=2)
+    if paged:
+        ck, cv, cks, cvs = cm.cache_write_batch_paged_q8(
+            ck, cv, cks, cvs, page_table, kT, vT, pos, seq_axis=2)
+    else:
+        ck, cv, cks, cvs = cm.cache_write_batch_q8(ck, cv, cks, cvs, kT, vT,
+                                                   pos, seq_axis=2)
     out = cm.decode_attention_named(q, ck, cv, valid, layout="bksd",
                                     backend=backend, k_scale=cks,
-                                    v_scale=cvs)
+                                    v_scale=cvs, page_table=page_table)
     out = out.reshape(b, 1, cfg.q_dim)
     return out @ lp["wo"], ck, cv, cks, cvs
 
@@ -227,22 +246,86 @@ def kv_cache_dtype(dtype, kv_dtype):
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, kv_dtype=None):
+               dtype=jnp.bfloat16, kv_dtype=None, page_size=None,
+               num_pages=None):
     """Decoder-only cache layout: (L, B, KV, S, D) ('bksd').
 
     ``kv_dtype='int8'`` stores K/V as int8 plus per-(lane, head, slot)
     fp32 scale buffers — the layout the ``*_q8`` decode backends consume.
+
+    ``page_size`` switches to the PAGED layout: instead of per-lane ring
+    buffers, K/V live in global pools of ``num_pages`` fixed-size pages
+    — ``k_pages``/``v_pages`` (L, P, KV, ps, D) plus a shared int32
+    ``page_table`` (B, W) mapping each lane's logical KV block to a
+    physical page (W = ceil(cache_len / ps)).  Page 0 is the reserved
+    garbage page (never allocated; inactive lanes' zeroed table rows
+    land there).  int8 adds (L, P, KV, ps) scale pools.
     """
     L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
     kvd = kv_cache_dtype(dtype, kv_dtype)
+    if page_size is None:
+        cache = {
+            "k": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
+            "v": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
+        }
+        if kv_dtype == "int8":
+            cache["k_scale"] = jnp.zeros((L, batch, kv, cache_len),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((L, batch, kv, cache_len),
+                                         jnp.float32)
+        return cache
+    ps = page_size
+    w = -(-cache_len // ps)
+    p = num_pages if num_pages is not None else 1 + batch * w
     cache = {
-        "k": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
-        "v": jnp.zeros((L, batch, kv, cache_len, hd), kvd),
+        "k_pages": jnp.zeros((L, p, kv, ps, hd), kvd),
+        "v_pages": jnp.zeros((L, p, kv, ps, hd), kvd),
+        "page_table": jnp.zeros((batch, w), jnp.int32),
     }
     if kv_dtype == "int8":
-        cache["k_scale"] = jnp.zeros((L, batch, kv, cache_len), jnp.float32)
-        cache["v_scale"] = jnp.zeros((L, batch, kv, cache_len), jnp.float32)
+        cache["k_scale_pages"] = jnp.zeros((L, p, kv, ps), jnp.float32)
+        cache["v_scale_pages"] = jnp.zeros((L, p, kv, ps), jnp.float32)
     return cache
+
+
+def paged_info(cfg: ArchConfig, cache_len: int, page_size: int):
+    """Paging capabilities of this family: incremental page allocation
+    (pages are claimed as the sequence grows) and prompt-prefix sharing
+    are both supported.  Logical capacity rounds cache_len up to whole
+    pages."""
+    w = -(-cache_len // page_size)
+    return {"pages_per_lane": w, "capacity": w * page_size,
+            "alloc": "incremental", "prefix_sharing": True}
+
+
+def cache_splice_paged(cfg: ArchConfig, cache, row, slot, pages,
+                       page_size: int):
+    """Splice a prefilled B=1 ring cache ``row`` into lane ``slot`` of a
+    paged ``cache``, scattering the first ``len(pages)`` KV blocks into
+    the given physical pages and rewriting the lane's table row.
+
+    ``pages`` is a static-length int32 vector (page COUNT is a compile-
+    time constant — one jit specialization per prefill bucket, same
+    policy as the scheduler's static plen); page IDs stay traced."""
+    n = pages.shape[0]
+    ps = page_size
+    w = cache["page_table"].shape[1]
+    out = dict(cache)
+    for key in ("k", "v"):
+        src = row[key][:, 0, :, :n * ps]               # (L, KV, n*ps, D)
+        L, kv = src.shape[0], src.shape[1]
+        x = src.reshape(L, kv, n, ps, -1).transpose(0, 2, 1, 3, 4)
+        pool = cache[key + "_pages"]
+        out[key + "_pages"] = pool.at[:, pages].set(x.astype(pool.dtype))
+        skey = key + "_scale"
+        if skey in row:
+            ssrc = row[skey][:, 0, :, :n * ps]         # (L, KV, n*ps)
+            sx = ssrc.reshape(L, kv, n, ps).transpose(0, 2, 1, 3)
+            spool = cache[skey + "_pages"]
+            out[skey + "_pages"] = spool.at[:, pages].set(sx)
+    trow = jnp.zeros((w,), jnp.int32).at[:n].set(pages.astype(jnp.int32))
+    out["page_table"] = cache["page_table"].at[slot].set(trow)
+    return out
 
 
 def cache_to_kv_dtype(cfg: ArchConfig, cache, kv_dtype):
@@ -304,8 +387,17 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
     Returns (logits (B, 1, V), cache), numerically matching the vmapped
     reference path.  An int8 cache (the ``k_scale`` leaf marks it) takes
     the quantizing write + q8 attention path; the branch is static, so
-    each cache dtype compiles its own specialization."""
+    each cache dtype compiles its own specialization.
+
+    A paged cache (the ``page_table`` leaf marks it) streams the PAGE
+    POOLS through the scan instead of per-lane rings; the page table is
+    layer-invariant, so it rides as a closure constant and comes back
+    unchanged."""
     x = _embed(cfg, params, tokens)
+    if "page_table" in cache:
+        return _decode_step_batch_paged(cfg, params, x, cache, pos,
+                                        window=window,
+                                        attn_backend=attn_backend)
     quantized = "k_scale" in cache
 
     if quantized:
@@ -335,6 +427,47 @@ def decode_step_batch(cfg: ArchConfig, params, tokens, cache, pos, *,
     x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k"],
                                       cache["v"]))
     return _logits(cfg, params, x), {"k": ck, "v": cv}
+
+
+def _decode_step_batch_paged(cfg: ArchConfig, params, x, cache, pos, *,
+                             window: int = 0, attn_backend=None):
+    """Paged twin of the :func:`decode_step_batch` scan bodies: per-layer
+    page-pool slices stream as xs/ys, the (B, W) page table is shared by
+    every layer."""
+    pt = cache["page_table"]
+    quantized = "k_scale_pages" in cache
+
+    if quantized:
+        def layer(x, scanned):
+            lp, ck, cv, cks, cvs = scanned
+            a, ck, cv, cks, cvs = attn_decode_batch(
+                cfg, lp, x, ck, cv, pos, window=window,
+                backend=attn_backend, cks=cks, cvs=cvs, page_table=pt)
+            x = x + a
+            x = x + mlp(cfg, lp, x)
+            return x, (ck, cv, cks, cvs)
+
+        x, (ck, cv, cks, cvs) = lax.scan(
+            layer, x, (params["layers"], cache["k_pages"],
+                       cache["v_pages"], cache["k_scale_pages"],
+                       cache["v_scale_pages"]))
+        return _logits(cfg, params, x), {
+            "k_pages": ck, "v_pages": cv, "k_scale_pages": cks,
+            "v_scale_pages": cvs, "page_table": pt}
+
+    def layer(x, scanned):
+        lp, ck, cv = scanned
+        a, ck, cv = attn_decode_batch(cfg, lp, x, ck, cv, pos,
+                                      window=window, backend=attn_backend,
+                                      page_table=pt)
+        x = x + a
+        x = x + mlp(cfg, lp, x)
+        return x, (ck, cv)
+
+    x, (ck, cv) = lax.scan(layer, x, (params["layers"], cache["k_pages"],
+                                      cache["v_pages"]))
+    return _logits(cfg, params, x), {"k_pages": ck, "v_pages": cv,
+                                     "page_table": pt}
 
 
 def prefill(cfg: ArchConfig, params, tokens, cache_len: int,

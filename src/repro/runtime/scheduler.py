@@ -48,7 +48,7 @@ compile count, exactly as the old engine's batch-level padding did.
 from __future__ import annotations
 
 import time
-from collections import deque
+from collections import deque, namedtuple
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Deque, Dict, List, Optional
@@ -59,6 +59,9 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ArchConfig
+from repro.runtime.pagepool import GARBAGE_PAGE, PagePool
+
+FreeCapacity = namedtuple("FreeCapacity", ["lanes", "pages"])
 
 
 @dataclass
@@ -96,7 +99,10 @@ class ContinuousBatchingScheduler:
                  prefill_buckets: Optional[List[int]] = None,
                  decode_mode: str = "batched",
                  attn_backend: Optional[str] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 kv_layout: str = "ring", page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -127,13 +133,59 @@ class ContinuousBatchingScheduler:
                 "kv_dtype='int8' requires decode_mode='batched' — the "
                 "single-token decode_step has no quantized cache path")
         self.kv_dtype = kv_dtype
+        # kv_layout='paged': block-table/paged KV — per-lane ring buffers
+        # become a global pool of fixed-size pages indirected through a
+        # (B, W) page table, with host-side refcounted allocation and
+        # copy-on-write shared-prefix reuse.  Families that don't expose
+        # ``paged_info`` (e.g. rwkv6's O(1) state has no KV to page) fall
+        # back to the ring layout silently.
+        if kv_layout not in ("ring", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r} "
+                             "(expected 'ring' or 'paged')")
+        self.page_size = page_size
+        self._paged = False
+        self.pool: Optional[PagePool] = None
+        if kv_layout == "paged" and hasattr(self.mod, "paged_info"):
+            if decode_mode != "batched":
+                raise ValueError(
+                    "kv_layout='paged' requires decode_mode='batched' — "
+                    "the vmapped decode_step has no paged cache path")
+            info = self.mod.paged_info(cfg, cache_len, page_size)
+            self._paged = True
+            self.pages_per_lane = int(info["pages_per_lane"])
+            self._capacity = int(info["capacity"])
+            self._alloc_mode = info["alloc"]           # incremental | full
+            self.prefix_sharing = bool(info["prefix_sharing"]) and \
+                prefix_sharing
+            # auto pool: garbage page + a full complement per lane + one
+            # lane's worth of slack for retained prefix entries
+            self.num_pages = num_pages if num_pages is not None else \
+                1 + (max_slots + 1) * self.pages_per_lane
+            if self.num_pages < 1 + self.pages_per_lane:
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold even one "
+                    f"lane ({self.pages_per_lane} pages + garbage page)")
+            self.pool = PagePool(self.num_pages, page_size)
+            # host mirrors of the device page table / lane positions —
+            # kept in lockstep so allocation decisions need no device
+            # reads (the zero-syncs-per-token property survives paging)
+            self._pt_host = np.zeros((max_slots, self.pages_per_lane),
+                                     np.int32)
+            self._host_pos = np.zeros(max_slots, np.int64)
+        else:
+            self.prefix_sharing = False
+        self.kv_layout = "paged" if self._paged else "ring"
+        # prefill row length: paged capacity rounds cache_len up to whole
+        # pages, and the splice reads the first n*ps ring slots
+        self._prefill_len = self._capacity if self._paged else cache_len
         # registry name (ref|pallas|auto); the registry's backend() falls
         # back to 'ref' silently, so reject typos here where the intent
         # is explicit — a misspelled 'pallas' must not benchmark 'ref'
         if attn_backend is not None:
             from repro.core.ops import REGISTRY, resolve_decode_backend
             resolved = resolve_decode_backend(
-                attn_backend, quantized=(kv_dtype == "int8"))
+                attn_backend, quantized=(kv_dtype == "int8"),
+                paged=self._paged)
             known = REGISTRY.op("decode_attention").backends
             if resolved not in known:
                 raise ValueError(
@@ -147,14 +199,32 @@ class ContinuousBatchingScheduler:
         self.tokens_generated = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        # paged-serving counters (stay zero for the ring layout)
+        self.admissions = 0
+        self.prefix_hits = 0
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
+        self.cow_copies = 0
         self.state = self._init_state(seed)
         self._step_fn = jax.jit(self._step)
         self._admit_fn = jax.jit(self._admit, static_argnames=("plen",))
+        if self._paged:
+            self._admit_paged_fn = jax.jit(self._admit_paged,
+                                           static_argnames=("plen",))
+            self._suffix_step_fn = jax.jit(self._suffix_step)
+            self._finalize_admit_fn = jax.jit(self._finalize_admit)
+            self._set_pt_row_fn = jax.jit(self._set_pt_row)
+            self._set_pt_entry_fn = jax.jit(self._set_pt_entry)
+            self._copy_page_fn = jax.jit(self._copy_page)
 
     # -- device-side state and jitted programs ------------------------------
 
     def _init_state(self, seed: int) -> Dict[str, Any]:
         b, cap = self.max_slots, self.max_new_cap
+        cache_kw = {"kv_dtype": self.kv_dtype}
+        if self._paged:
+            cache_kw.update(page_size=self.page_size,
+                            num_pages=self.num_pages)
         return {
             "tokens": jnp.zeros((b, 1), jnp.int32),
             "pos": jnp.zeros((b,), jnp.int32),
@@ -165,8 +235,7 @@ class ContinuousBatchingScheduler:
             "out_len": jnp.zeros((b,), jnp.int32),
             "key": jax.random.PRNGKey(seed),
             "cache": self.mod.init_cache(self.cfg, b, self.cache_len,
-                                         jnp.float32,
-                                         kv_dtype=self.kv_dtype),
+                                         jnp.float32, **cache_kw),
         }
 
     def _decode_slots(self, params, tokens, cache, pos):
@@ -220,7 +289,7 @@ class ContinuousBatchingScheduler:
         splice cache row + lane state into the live batch."""
         del plen  # static: selects the compiled specialization
         logits, cache1 = self.mod.prefill(self.cfg, params, prompt,
-                                          self.cache_len,
+                                          self._prefill_len,
                                           cache_dtype=jnp.float32)
         # quantize/cast AFTER the float prefill so admission pays the
         # conversion once, and the spliced row matches the live layout
@@ -244,6 +313,173 @@ class ContinuousBatchingScheduler:
             "cache": cache,
         }
 
+    # -- paged jitted programs (page table updates, COW, admission) ----------
+
+    def _admit_paged(self, params, state, prompt, slot, temp, budget,
+                     pages, *, plen):
+        """Paged cold-path admission: prefill the full prompt (B=1 ring
+        row), scatter its KV blocks into the lane's freshly allocated
+        ``pages``, rewrite the lane's table row, and splice lane state.
+        Same PRNG discipline as :meth:`_admit` (one split, first token
+        sampled from the last prefill logits)."""
+        del plen  # static: selects the compiled specialization
+        logits, cache1 = self.mod.prefill(self.cfg, params, prompt,
+                                          self._prefill_len,
+                                          cache_dtype=jnp.float32)
+        cache1 = self.mod.cache_to_kv_dtype(self.cfg, cache1, self.kv_dtype)
+        key, sub = jax.random.split(state["key"])
+        first = _sample(sub, logits[:, -1], temp[None])[0]
+        cache = self.mod.cache_splice_paged(self.cfg, state["cache"],
+                                            cache1, slot, pages,
+                                            self.page_size)
+        cap = self.max_new_cap
+        return {
+            "tokens": state["tokens"].at[slot, 0].set(first),
+            "pos": state["pos"].at[slot].set(prompt.shape[1]),
+            "temp": state["temp"].at[slot].set(temp),
+            "active": state["active"].at[slot].set(True),
+            "budget": state["budget"].at[slot].set(budget),
+            "out_buf": state["out_buf"].at[slot].set(
+                jnp.full((cap,), self.pad_id, jnp.int32)
+                .at[0].set(first)),
+            "out_len": state["out_len"].at[slot].set(1),
+            "key": key,
+            "cache": cache,
+        }
+
+    def _suffix_step(self, params, state, tok, slot, pos_scalar):
+        """One suffix-prefill step for a prefix-cache hit: feed ``tok``
+        at position ``pos_scalar`` on lane ``slot`` through the regular
+        batched decode (writing its KV through the page table) and
+        return the lane's logits plus the state with only the cache
+        advanced.
+
+        The other lanes' writes are IDEMPOTENT: each active lane
+        re-computes the KV of its current (not-yet-stepped) token at its
+        current position — the identical value the next real step will
+        write — and inactive lanes' zeroed table rows land in the
+        garbage page.  The host runs copy-on-write checks for every
+        active lane before each call, so shared pages are never touched.
+        No PRNG split and no out_buf/pos mutation happens here — the
+        key trajectory matches the ring scheduler exactly."""
+        tokens = state["tokens"].at[slot, 0].set(tok)
+        pos = state["pos"].at[slot].set(pos_scalar)
+        last, cache = self._decode_lanes(params, tokens, state["cache"],
+                                         pos)
+        return last[slot], {**state, "cache": cache}
+
+    def _finalize_admit(self, state, logits, slot, temp, budget, plen):
+        """Close a prefix-hit admission: one PRNG split (mirroring
+        :meth:`_admit`), sample the first output token from the last
+        suffix-step logits, splice lane scalars."""
+        key, sub = jax.random.split(state["key"])
+        first = _sample(sub, logits[None], temp[None])[0]
+        cap = self.max_new_cap
+        return {
+            "tokens": state["tokens"].at[slot, 0].set(first),
+            "pos": state["pos"].at[slot].set(plen),
+            "temp": state["temp"].at[slot].set(temp),
+            "active": state["active"].at[slot].set(True),
+            "budget": state["budget"].at[slot].set(budget),
+            "out_buf": state["out_buf"].at[slot].set(
+                jnp.full((cap,), self.pad_id, jnp.int32)
+                .at[0].set(first)),
+            "out_len": state["out_len"].at[slot].set(1),
+            "key": key,
+            "cache": state["cache"],
+        }
+
+    def _set_pt_row(self, state, slot, row):
+        cache = dict(state["cache"])
+        cache["page_table"] = cache["page_table"].at[slot].set(row)
+        return {**state, "cache": cache}
+
+    def _set_pt_entry(self, state, slot, idx, pid):
+        cache = dict(state["cache"])
+        cache["page_table"] = cache["page_table"].at[slot, idx].set(pid)
+        return {**state, "cache": cache}
+
+    def _copy_page(self, state, src, dst, slot, idx):
+        """Copy-on-write: duplicate physical page ``src`` into ``dst``
+        across every pool leaf and repoint the lane's table entry."""
+        cache = dict(state["cache"])
+        for k in cache:
+            if k.endswith("_pages"):
+                cache[k] = cache[k].at[:, dst].set(cache[k][:, src])
+        cache["page_table"] = cache["page_table"].at[slot, idx].set(dst)
+        return {**state, "cache": cache}
+
+    # -- host-side page bookkeeping ------------------------------------------
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` pages, evicting LRU prefix-cache entries under
+        pressure; None when the pool genuinely cannot supply them."""
+        pages = self.pool.alloc(n)
+        while pages is None and self.pool.evict_one():
+            pages = self.pool.alloc(n)
+        return pages
+
+    def _ensure_writable(self, slot: int, pos: int) -> None:
+        """Guarantee lane ``slot`` exclusively owns the page its write at
+        ``pos`` lands in: allocate on first touch, copy-on-write when the
+        page is shared (prefix reuse keeps refcount > 1).  Invariant:
+        every non-garbage entry in a lane's table row holds exactly one
+        refcount on behalf of that lane."""
+        idx = (pos % self._capacity) // self.page_size
+        phys = int(self._pt_host[slot, idx])
+        if phys == GARBAGE_PAGE:
+            got = self._alloc_pages(1)
+            if got is None:
+                raise RuntimeError(
+                    f"page pool exhausted mid-decode (slot {slot}, "
+                    f"pos {pos}) — num_pages={self.num_pages} is too "
+                    "small for the admitted load")
+            self._pt_host[slot, idx] = got[0]
+            self.state = self._set_pt_entry_fn(
+                self.state, jnp.int32(slot), jnp.int32(idx),
+                jnp.int32(got[0]))
+        elif self.pool.refcount[phys] > 1:
+            got = self._alloc_pages(1)
+            if got is None:
+                raise RuntimeError(
+                    f"page pool exhausted on copy-on-write (slot {slot}, "
+                    f"pos {pos}) — num_pages={self.num_pages} is too "
+                    "small for the admitted load")
+            self._pt_host[slot, idx] = got[0]
+            self.state = self._copy_page_fn(
+                self.state, jnp.int32(phys), jnp.int32(got[0]),
+                jnp.int32(slot), jnp.int32(idx))
+            self.pool.free(phys)               # drop the lane's shared ref
+            self.cow_copies += 1
+
+    def _prepare_writes(self, extra: Optional[int] = None) -> None:
+        """Run the COW/allocation check for every lane about to write —
+        all active lanes with steps left, plus ``extra`` (a lane mid
+        suffix-prefill).  Called before every device step that writes
+        KV; 'full' allocation mode owns all pages up-front so only
+        incremental mode does work here."""
+        if self._alloc_mode != "incremental":
+            return
+        for slot, req in enumerate(self.slots):
+            if slot == extra:
+                continue
+            if req is not None and self._steps_left[slot] > 0:
+                self._ensure_writable(slot, int(self._host_pos[slot]))
+
+    def _release_lane_pages(self, slot: int) -> None:
+        """Drop the lane's reference on every page in its table row and
+        zero the row on host AND device — a retired lane's stale mapping
+        must never alias a reallocated page."""
+        for idx in range(self.pages_per_lane):
+            phys = int(self._pt_host[slot, idx])
+            if phys != GARBAGE_PAGE:
+                self.pool.free(phys)
+        self._pt_host[slot] = 0
+        self._host_pos[slot] = 0
+        self.state = self._set_pt_row_fn(
+            self.state, jnp.int32(slot),
+            jnp.zeros((self.pages_per_lane,), jnp.int32))
+
     # -- host-side scheduling ------------------------------------------------
 
     def submit(self, request: Request) -> None:
@@ -254,7 +490,24 @@ class ContinuousBatchingScheduler:
                 f"{request.max_new_tokens} exceeds scheduler cap "
                 f"{self.max_new_cap}")
         plen = self._bucket(len(request.prompt))
-        if plen > self.cache_len:
+        if self._paged:
+            # pool-capacity guard (the old cache_len bound is obsolete:
+            # a lane's logical window wraps at pages_per_lane * page_size
+            # like the ring did, but pages must EXIST in the pool)
+            if plen > self._capacity:
+                raise ValueError(
+                    f"request {request.uid}: prompt length "
+                    f"{len(request.prompt)} (padded to {plen}) exceeds "
+                    f"the paged lane capacity {self._capacity} "
+                    f"({self.pages_per_lane} pages x {self.page_size})")
+            need = min(-(-(plen + request.max_new_tokens)
+                         // self.page_size), self.pages_per_lane)
+            if need > self.num_pages - 1:
+                raise ValueError(
+                    f"request {request.uid}: needs {need} pages but the "
+                    f"pool holds only {self.num_pages - 1} allocatable "
+                    f"(num_pages={self.num_pages} incl. garbage page)")
+        elif plen > self.cache_len:
             raise ValueError(
                 f"request {request.uid}: prompt length "
                 f"{len(request.prompt)} (padded to {plen} by the prefill "
@@ -280,16 +533,89 @@ class ContinuousBatchingScheduler:
             plen = self._bucket(len(req.prompt))
             toks = np.full((1, plen), self.pad_id, np.int32)
             toks[0, plen - len(req.prompt):] = req.prompt    # left-pad
-            self.state = self._admit_fn(
-                self.params, self.state, jnp.asarray(toks),
-                jnp.int32(slot), jnp.float32(req.temperature),
-                jnp.int32(req.max_new_tokens), plen=plen)
+            if self._paged:
+                if not self._admit_paged_host(req, slot, toks, plen):
+                    # pool pressure: requeue and stop admitting — running
+                    # lanes retire and release pages
+                    self.pending.appendleft(req)
+                    break
+            else:
+                self.state = self._admit_fn(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.int32(slot), jnp.float32(req.temperature),
+                    jnp.int32(req.max_new_tokens), plen=plen)
             self.slots[slot] = req
             # the sampled-at-prefill first token is output token #1
             self._steps_left[slot] = req.max_new_tokens - 1
             admitted = True
         if admitted:
             self.prefill_s += time.perf_counter() - t0
+
+    def _admit_paged_host(self, req: Request, slot: int, toks: np.ndarray,
+                          plen: int) -> bool:
+        """Paged admission: prefix-cache lookup first (map shared pages
+        read-only and prefill only the suffix), else allocate pages and
+        run the full prefill + splice.  Returns False to defer when the
+        pool cannot supply the pages even after LRU eviction."""
+        ps = self.page_size
+        npages = self.pages_per_lane if self._alloc_mode == "full" \
+            else -(-plen // ps)
+        key_tokens = [int(t) for t in toks[0]]
+        self.admissions += 1
+        self.prefill_tokens_total += plen
+        entry = self.pool.prefix_lookup(key_tokens) \
+            if self.prefix_sharing else None
+        if entry is not None:
+            # cap the reused length at plen - 1 so at least one suffix
+            # step runs — its logits seed the first sampled token
+            t = min(entry.length, plen - 1)
+            span = -(-t // ps)
+            shared = list(entry.pages[:span])
+            self.prefix_hits += 1
+            self.prefill_tokens_saved += t
+            for p in shared:
+                self.pool.ref(p)
+            self._pt_host[slot] = 0
+            self._pt_host[slot, :span] = shared
+            row = np.zeros((self.pages_per_lane,), np.int32)
+            row[:span] = shared
+            self.state = self._set_pt_row_fn(self.state, jnp.int32(slot),
+                                             jnp.asarray(row))
+            # suffix prefill: one batched step per remaining prompt token
+            logits = None
+            for i in range(t, plen):
+                self._prepare_writes(extra=slot)
+                self._ensure_writable(slot, i)
+                logits, self.state = self._suffix_step_fn(
+                    self.params, self.state, jnp.int32(toks[0, i]),
+                    jnp.int32(slot), jnp.int32(i))
+            self.state = self._finalize_admit_fn(
+                self.state, logits, jnp.int32(slot),
+                jnp.float32(req.temperature),
+                jnp.int32(req.max_new_tokens), jnp.int32(plen))
+        else:
+            pages = self._alloc_pages(npages)
+            if pages is None:
+                self.admissions -= 1
+                self.prefill_tokens_total -= plen
+                return False
+            self._pt_host[slot] = 0
+            self._pt_host[slot, :npages] = pages
+            self.state = self._admit_paged_fn(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.int32(slot), jnp.float32(req.temperature),
+                jnp.int32(req.max_new_tokens),
+                jnp.asarray(pages, jnp.int32), plen=plen)
+        self._host_pos[slot] = plen
+        if self.prefix_sharing:
+            # publish this lane's page-aligned prefixes (and the full
+            # prompt).  COW keeps the entries pristine once the lane
+            # decodes past them.
+            span_full = -(-plen // ps)
+            self.pool.prefix_register(
+                key_tokens,
+                [int(p) for p in self._pt_host[slot, :span_full]])
+        return True
 
     def _retire_finished(self) -> None:
         for slot, req in enumerate(self.slots):
@@ -303,6 +629,8 @@ class ContinuousBatchingScheduler:
             req.finished_at = time.perf_counter()
             self.tokens_generated += len(req.output)
             self.slots[slot] = None
+            if self._paged:
+                self._release_lane_pages(slot)
 
     def tick(self) -> bool:
         """Admit pending requests, advance every active lane one token,
@@ -316,10 +644,16 @@ class ContinuousBatchingScheduler:
         worked = False
         if any(self._steps_left[s] > 0 for s, r in enumerate(self.slots)
                if r is not None):
+            if self._paged:
+                # every writing lane must own its target page before the
+                # step lands (first-touch allocation / copy-on-write)
+                self._prepare_writes()
             self.state = self._step_fn(self.params, self.state)
             for slot, req in enumerate(self.slots):
                 if req is not None and self._steps_left[slot] > 0:
                     self._steps_left[slot] -= 1
+                    if self._paged:
+                        self._host_pos[slot] += 1
             worked = True
         syncs = self.host_syncs
         self._retire_finished()
@@ -332,6 +666,50 @@ class ContinuousBatchingScheduler:
         while self.tick():
             pass
 
-    @property
-    def free_slots(self) -> int:
-        return sum(r is None for r in self.slots)
+    def free_slots(self) -> FreeCapacity:
+        """Free admission capacity: open decode lanes, and (paged layout
+        only) allocatable pages in the pool — ``pages`` is None for the
+        ring layout, where lanes are the only resource."""
+        lanes = sum(r is None for r in self.slots)
+        pages = self.pool.available() if self._paged else None
+        return FreeCapacity(lanes, pages)
+
+    def kv_bytes_resident(self) -> int:
+        """Device bytes actually holding KV state right now.  Ring: the
+        full per-lane buffers (allocated whether or not a lane is live).
+        Paged: only the referenced pages, plus the page-table and
+        refcount bookkeeping arrays — the number the ISSUE's residency
+        claim is measured on."""
+        cache = self.state["cache"]
+        if not self._paged:
+            return sum(int(v.size) * v.dtype.itemsize
+                       for k, v in cache.items())
+        used = self.num_pages - self.pool.available()
+        total = 0
+        for k, v in cache.items():
+            nbytes = int(v.size) * v.dtype.itemsize
+            if k.endswith("_pages"):
+                total += (nbytes // self.num_pages) * used
+            else:                   # page_table + dense per-lane leaves
+                total += nbytes
+        return total + self.pool.refcount.nbytes
+
+    def paged_stats(self) -> Dict[str, Any]:
+        """Prefix-cache / paging counters for benchmarks and tests."""
+        return {
+            "layout": self.kv_layout,
+            "admissions": self.admissions,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits / self.admissions
+                                if self.admissions else 0.0),
+            "prefill_tokens_total": self.prefill_tokens_total,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefill_tokens_saved_frac": (
+                self.prefill_tokens_saved / self.prefill_tokens_total
+                if self.prefill_tokens_total else 0.0),
+            "cow_copies": self.cow_copies,
+            "kv_bytes_resident": self.kv_bytes_resident(),
+            "free_pages": (self.pool.available() if self._paged else None),
+            "prefix_entries": (self.pool.prefix_entries()
+                               if self._paged else 0),
+        }

@@ -65,7 +65,10 @@ class ServingEngine:
                  prefill_buckets: Optional[List[int]] = None,
                  decode_mode: str = "batched",
                  attn_backend: Optional[str] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 kv_layout: str = "ring", page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -77,6 +80,12 @@ class ServingEngine:
         self.decode_mode = decode_mode
         self.attn_backend = attn_backend
         self.kv_dtype = kv_dtype
+        # kv_layout='paged': block-table paged KV cache + copy-on-write
+        # shared-prefix reuse (see runtime.scheduler / runtime.pagepool)
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.prefix_sharing = prefix_sharing
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -112,7 +121,11 @@ class ServingEngine:
                 prefill_buckets=self.prefill_buckets,
                 decode_mode=self.decode_mode,
                 attn_backend=self.attn_backend,
-                kv_dtype=self.kv_dtype)
+                kv_dtype=self.kv_dtype,
+                kv_layout=self.kv_layout,
+                page_size=self.page_size,
+                num_pages=self.num_pages,
+                prefix_sharing=self.prefix_sharing)
             self._sched.pending.extend(pending)
         return self._sched
 

@@ -315,6 +315,23 @@ def test_tree_bytes_counts_qtensor_scales():
     assert ratio < 4.0                      # strictly below payload-only 4x
 
 
+def test_tree_bytes_counts_paged_bookkeeping():
+    """A paged KV cache tree carries int32 page tables (device) and an
+    int32 refcount array (host numpy): tree_bytes must count both at
+    4 bytes/entry, ignore non-array leaves, and compression_ratio must
+    dilute toward 1 rather than drop the overhead."""
+    qt = quantize.quantize(jax.random.normal(KEY, (64, 64)))
+    page_table = jnp.zeros((4, 8), jnp.int32)
+    refcount = np.zeros((33,), np.int32)
+    tree = {"w": qt, "page_table": page_table, "refcount": refcount,
+            "meta": None}
+    base = 64 * 64 * 1 + 64 * 4
+    assert quantize.tree_bytes(tree) == base + 4 * 8 * 4 + 33 * 4
+    # bookkeeping counts the same on both sides -> strictly lower ratio
+    assert (quantize.compression_ratio({"w": qt})
+            > quantize.compression_ratio(tree) > 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Compression (roadmap items 7/8: pruning, low-rank approx matmul)
 # ---------------------------------------------------------------------------

@@ -37,7 +37,7 @@ def test_decode_loop_zero_host_syncs_per_token(tiny):
         sched.submit(Request(uid=uid, prompt=[1 + uid, 2, 3],
                              max_new_tokens=12))
     sched.tick()          # admission tick (prefill h2d allowed)
-    assert sched.free_slots == 0
+    assert sched.free_slots().lanes == 0
     with jax.transfer_guard_device_to_host("disallow"):
         for _ in range(8):            # 8 tokens/lane, nothing retires
             sched.tick()

@@ -34,6 +34,11 @@ from repro.sharding_hints import hint
 
 LRU_C = 8.0
 
+# the local-attention window is a ring that wraps from token 0 BY DESIGN
+# (attention only ever looks back window_size tokens), so the scheduler's
+# prompt+max_new_tokens wrap guard must not reject long generations here
+RING_WRAP_SAFE = True
+
 
 def layer_kinds(cfg: ArchConfig):
     """List of 'rec' | 'attn' per layer."""

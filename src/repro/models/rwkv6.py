@@ -29,6 +29,10 @@ from repro.models import common as cm
 from repro.models.common import P
 from repro.sharding_hints import hint
 
+# O(1) matrix state, no KV ring at all — generation length is unbounded
+# by cache_len, so the scheduler's ring-wrap guard does not apply
+RING_WRAP_SAFE = True
+
 MIX_LORA = 32     # rank of the ddlerp mixing lora (5 targets: w,k,v,r,g)
 DECAY_LORA = 64   # rank of the decay lora
 CHUNK = 16        # intra-chunk length for the parallel scan

@@ -6,6 +6,8 @@ multi-model server); ``repro.runtime.scheduler`` is the slot-based
 continuous-batching decode scheduler built on top of it.
 """
 from repro.runtime.base import CommandBuffer, DeviceRuntime
+from repro.runtime.faults import AllocFault, FaultInjector, ScriptedFaults
 from repro.runtime.scheduler import ContinuousBatchingScheduler
 
-__all__ = ["CommandBuffer", "DeviceRuntime", "ContinuousBatchingScheduler"]
+__all__ = ["CommandBuffer", "DeviceRuntime", "ContinuousBatchingScheduler",
+           "FaultInjector", "AllocFault", "ScriptedFaults"]

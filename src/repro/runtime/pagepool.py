@@ -147,6 +147,16 @@ class PagePool:
     def prefix_entries(self) -> int:
         return len(self._prefixes)
 
+    def entry_page_refs(self) -> np.ndarray:
+        """Per-page reference counts held by prefix-cache entries — the
+        scheduler's ``audit_pages`` combines this with the live lanes'
+        page tables to reconstruct (and assert) the full refcounts."""
+        refs = np.zeros(self.num_pages, np.int64)
+        for entry in self._prefixes.values():
+            for p in entry.pages:
+                refs[p] += 1
+        return refs
+
     def leak_check(self) -> None:
         """Every page is either free, garbage, or reachable from a live
         reference — asserts the refcount/free-list invariant (used by

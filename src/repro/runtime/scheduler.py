@@ -44,6 +44,23 @@ positions shift by the pad count) rather than the exact unpadded
 computation — the default (``None``) prefills at exact lengths and is
 bit-identical to a solo run; buckets trade that exactness for bounded
 compile count, exactly as the old engine's batch-level padding did.
+
+Request lifecycle (PR 8): the scheduler degrades instead of crashing.
+When the paged pool cannot supply a page mid-decode (first touch or
+copy-on-write), the lowest-priority lane is **preempted** — its pages
+released, its prompt + output-so-far requeued at the front of
+``pending`` — and re-admitted through the normal prefill/prefix-cache
+path (vLLM-style recompute preemption), token-identical under greedy.
+A per-lane device-side stop set lets a lane that samples EOS clear its
+own ``active`` bit without a host sync; a periodic done-mask fetch
+(``mask_syncs``, only when a live lane actually has stop tokens)
+retires such lanes early with ``finish_reason="eos"``.  Requests carry
+optional ``deadline_s`` wall-clock deadlines, ``cancel(uid)`` retires a
+lane (or drops a pending request) releasing its pages, and an optional
+:class:`~repro.runtime.faults.FaultInjector` is consulted at page
+allocation, admission, and step boundaries so tests can force every
+degraded path deterministically.  A no-progress watchdog turns a
+host/device desync into a diagnostic error instead of a silent spin.
 """
 from __future__ import annotations
 
@@ -59,6 +76,7 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ArchConfig
+from repro.runtime.faults import FaultInjector
 from repro.runtime.pagepool import GARBAGE_PAGE, PagePool
 
 FreeCapacity = namedtuple("FreeCapacity", ["lanes", "pages"])
@@ -74,6 +92,13 @@ class Request:
     done: bool = False
     submitted_at: float = 0.0
     finished_at: float = 0.0
+    # lifecycle: extra per-request stop tokens (union'd with the
+    # scheduler's eos_id), an optional wall-clock deadline measured from
+    # submit(), and how the request ended —
+    # "eos" | "length" | "cancelled" | "timeout"
+    stop_tokens: Optional[List[int]] = None
+    deadline_s: Optional[float] = None
+    finish_reason: Optional[str] = None
 
 
 def _sample(key, logits, temp):
@@ -102,7 +127,12 @@ class ContinuousBatchingScheduler:
                  kv_dtype: Optional[str] = None,
                  kv_layout: str = "ring", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 eos_id: Optional[int] = None,
+                 max_stop_tokens: int = 4,
+                 eos_check_interval: int = 8,
+                 watchdog_ticks: int = 256,
+                 faults: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -205,8 +235,35 @@ class ContinuousBatchingScheduler:
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
         self.cow_copies = 0
+        # -- request-lifecycle state ------------------------------------
+        self.eos_id = eos_id
+        if max_stop_tokens < 1:
+            raise ValueError("max_stop_tokens must be >= 1")
+        self.max_stop_tokens = max_stop_tokens
+        self.eos_check_interval = max(1, eos_check_interval)
+        self.watchdog_ticks = watchdog_ticks
+        self.faults = faults
+        self.preemptions = 0
+        self.eos_finishes = 0
+        self.eos_steps_saved = 0
+        self.deadline_misses = 0
+        self.cancellations = 0
+        self.mask_syncs = 0           # periodic done-mask fetches (EOS)
+        self.finish_reasons: Dict[str, int] = {}
+        self._tick_no = 0
+        self._stall_ticks = 0
+        # uids cancelled before we could find them (still pending behind
+        # other requests, or mid-admission) — consumed at admission time
+        self._cancel_requested: set = set()
+        # host mirror of which lanes have a non-empty stop set: the
+        # periodic done-mask fetch only runs when some live lane could
+        # actually stop early, so stop-free workloads keep the strict
+        # zero-host-syncs-per-token property
+        self._has_stops = np.zeros(max_slots, bool)
+        self._stop_sets: List[frozenset] = [frozenset()] * max_slots
         self.state = self._init_state(seed)
         self._step_fn = jax.jit(self._step)
+        self._deactivate_fn = jax.jit(self._deactivate)
         self._admit_fn = jax.jit(self._admit, static_argnames=("plen",))
         if self._paged:
             self._admit_paged_fn = jax.jit(self._admit_paged,
@@ -233,6 +290,9 @@ class ContinuousBatchingScheduler:
             "budget": jnp.zeros((b,), jnp.int32),   # per-slot max_new_tokens
             "out_buf": jnp.full((b, cap), self.pad_id, jnp.int32),
             "out_len": jnp.zeros((b,), jnp.int32),
+            # per-lane stop-token set, -1 = empty slot; a lane that
+            # samples any of these clears its own active bit on device
+            "stop": jnp.full((b, self.max_stop_tokens), -1, jnp.int32),
             "key": jax.random.PRNGKey(seed),
             "cache": self.mod.init_cache(self.cfg, b, self.cache_len,
                                          jnp.float32, **cache_kw),
@@ -271,20 +331,32 @@ class ContinuousBatchingScheduler:
         cur = state["out_buf"][rows, cols]
         out_buf = state["out_buf"].at[rows, cols].set(
             jnp.where(write, nxt, cur))
+        # device-side EOS: a lane whose sampled token is in its stop set
+        # clears its own active bit.  The stop token IS written to the
+        # output (so "length" retirement sees it too); the lane simply
+        # stops advancing.  -1 entries never match (tokens are >= 0).
+        stop_hit = write & (nxt[:, None] == state["stop"]).any(axis=-1)
         return {
             "tokens": jnp.where(write[:, None], nxt[:, None],
                                 state["tokens"]),
             "pos": state["pos"] + write.astype(jnp.int32),
             "temp": state["temp"],
-            "active": write,
+            "active": write & ~stop_hit,
             "budget": state["budget"],
             "out_buf": out_buf,
             "out_len": state["out_len"] + write.astype(jnp.int32),
+            "stop": state["stop"],
             "key": key,
             "cache": cache,
         }
 
-    def _admit(self, params, state, prompt, slot, temp, budget, *, plen):
+    def _deactivate(self, state, slot):
+        """Clear one lane's active bit (cancel/timeout retirement) so its
+        subsequent masked writes stay masked."""
+        return {**state, "active": state["active"].at[slot].set(False)}
+
+    def _admit(self, params, state, prompt, slot, temp, budget, stop_row,
+               *, plen):
         """Prefill one prompt (B=1), sample its first token on device, and
         splice cache row + lane state into the live batch."""
         del plen  # static: selects the compiled specialization
@@ -299,16 +371,19 @@ class ContinuousBatchingScheduler:
         cache = jax.tree.map(lambda c, c1: c.at[:, slot].set(c1[:, 0]),
                              state["cache"], cache1)
         cap = self.max_new_cap
+        # the first sampled token can itself be a stop token
+        hit = (first == stop_row).any()
         return {
             "tokens": state["tokens"].at[slot, 0].set(first),
             "pos": state["pos"].at[slot].set(prompt.shape[1]),
             "temp": state["temp"].at[slot].set(temp),
-            "active": state["active"].at[slot].set(True),
+            "active": state["active"].at[slot].set(~hit),
             "budget": state["budget"].at[slot].set(budget),
             "out_buf": state["out_buf"].at[slot].set(
                 jnp.full((cap,), self.pad_id, jnp.int32)
                 .at[0].set(first)),
             "out_len": state["out_len"].at[slot].set(1),
+            "stop": state["stop"].at[slot].set(stop_row),
             "key": key,
             "cache": cache,
         }
@@ -316,7 +391,7 @@ class ContinuousBatchingScheduler:
     # -- paged jitted programs (page table updates, COW, admission) ----------
 
     def _admit_paged(self, params, state, prompt, slot, temp, budget,
-                     pages, *, plen):
+                     pages, stop_row, *, plen):
         """Paged cold-path admission: prefill the full prompt (B=1 ring
         row), scatter its KV blocks into the lane's freshly allocated
         ``pages``, rewrite the lane's table row, and splice lane state.
@@ -333,16 +408,18 @@ class ContinuousBatchingScheduler:
                                             cache1, slot, pages,
                                             self.page_size)
         cap = self.max_new_cap
+        hit = (first == stop_row).any()
         return {
             "tokens": state["tokens"].at[slot, 0].set(first),
             "pos": state["pos"].at[slot].set(prompt.shape[1]),
             "temp": state["temp"].at[slot].set(temp),
-            "active": state["active"].at[slot].set(True),
+            "active": state["active"].at[slot].set(~hit),
             "budget": state["budget"].at[slot].set(budget),
             "out_buf": state["out_buf"].at[slot].set(
                 jnp.full((cap,), self.pad_id, jnp.int32)
                 .at[0].set(first)),
             "out_len": state["out_len"].at[slot].set(1),
+            "stop": state["stop"].at[slot].set(stop_row),
             "key": key,
             "cache": cache,
         }
@@ -368,23 +445,26 @@ class ContinuousBatchingScheduler:
                                          pos)
         return last[slot], {**state, "cache": cache}
 
-    def _finalize_admit(self, state, logits, slot, temp, budget, plen):
+    def _finalize_admit(self, state, logits, slot, temp, budget, plen,
+                        stop_row):
         """Close a prefix-hit admission: one PRNG split (mirroring
         :meth:`_admit`), sample the first output token from the last
         suffix-step logits, splice lane scalars."""
         key, sub = jax.random.split(state["key"])
         first = _sample(sub, logits[None], temp[None])[0]
         cap = self.max_new_cap
+        hit = (first == stop_row).any()
         return {
             "tokens": state["tokens"].at[slot, 0].set(first),
             "pos": state["pos"].at[slot].set(plen),
             "temp": state["temp"].at[slot].set(temp),
-            "active": state["active"].at[slot].set(True),
+            "active": state["active"].at[slot].set(~hit),
             "budget": state["budget"].at[slot].set(budget),
             "out_buf": state["out_buf"].at[slot].set(
                 jnp.full((cap,), self.pad_id, jnp.int32)
                 .at[0].set(first)),
             "out_len": state["out_len"].at[slot].set(1),
+            "stop": state["stop"].at[slot].set(stop_row),
             "key": key,
             "cache": state["cache"],
         }
@@ -411,60 +491,128 @@ class ContinuousBatchingScheduler:
 
     # -- host-side page bookkeeping ------------------------------------------
 
-    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+    def _alloc_pages(self, n: int, *, site: str = "",
+                     slot: Optional[int] = None) -> Optional[List[int]]:
         """Claim ``n`` pages, evicting LRU prefix-cache entries under
-        pressure; None when the pool genuinely cannot supply them."""
+        pressure; None when the pool genuinely cannot supply them.  The
+        fault injector is consulted FIRST so an injected failure models
+        hard exhaustion (no eviction rescue) deterministically."""
+        if self.faults is not None and self.faults.on_alloc(
+                site, tick=self._tick_no, slot=slot, n=n):
+            return None
         pages = self.pool.alloc(n)
         while pages is None and self.pool.evict_one():
             pages = self.pool.alloc(n)
         return pages
 
-    def _ensure_writable(self, slot: int, pos: int) -> None:
+    def _ensure_writable(self, slot: int, pos: int, site: str = "") -> bool:
         """Guarantee lane ``slot`` exclusively owns the page its write at
         ``pos`` lands in: allocate on first touch, copy-on-write when the
         page is shared (prefix reuse keeps refcount > 1).  Invariant:
         every non-garbage entry in a lane's table row holds exactly one
-        refcount on behalf of that lane."""
+        refcount on behalf of that lane.
+
+        Returns False — WITHOUT raising — when the pool cannot supply
+        the page even after LRU eviction; the caller preempts a lane to
+        free pages and retries."""
         idx = (pos % self._capacity) // self.page_size
         phys = int(self._pt_host[slot, idx])
         if phys == GARBAGE_PAGE:
-            got = self._alloc_pages(1)
+            got = self._alloc_pages(1, site=site + "first_touch", slot=slot)
             if got is None:
-                raise RuntimeError(
-                    f"page pool exhausted mid-decode (slot {slot}, "
-                    f"pos {pos}) — num_pages={self.num_pages} is too "
-                    "small for the admitted load")
+                return False
             self._pt_host[slot, idx] = got[0]
             self.state = self._set_pt_entry_fn(
                 self.state, jnp.int32(slot), jnp.int32(idx),
                 jnp.int32(got[0]))
         elif self.pool.refcount[phys] > 1:
-            got = self._alloc_pages(1)
+            got = self._alloc_pages(1, site=site + "cow", slot=slot)
             if got is None:
-                raise RuntimeError(
-                    f"page pool exhausted on copy-on-write (slot {slot}, "
-                    f"pos {pos}) — num_pages={self.num_pages} is too "
-                    "small for the admitted load")
+                return False
             self._pt_host[slot, idx] = got[0]
             self.state = self._copy_page_fn(
                 self.state, jnp.int32(phys), jnp.int32(got[0]),
                 jnp.int32(slot), jnp.int32(idx))
             self.pool.free(phys)               # drop the lane's shared ref
             self.cow_copies += 1
+        return True
 
     def _prepare_writes(self, extra: Optional[int] = None) -> None:
         """Run the COW/allocation check for every lane about to write —
         all active lanes with steps left, plus ``extra`` (a lane mid
         suffix-prefill).  Called before every device step that writes
         KV; 'full' allocation mode owns all pages up-front so only
-        incremental mode does work here."""
+        incremental mode does work here.
+
+        When a page cannot be supplied, the lowest-priority lane is
+        preempted (releasing its pages) and the check retries — the
+        writing lane itself is the last candidate, in which case it is
+        preempted instead of written."""
         if self._alloc_mode != "incremental":
             return
-        for slot, req in enumerate(self.slots):
+        for slot in range(self.max_slots):
             if slot == extra:
                 continue
-            if req is not None and self._steps_left[slot] > 0:
-                self._ensure_writable(slot, int(self._host_pos[slot]))
+            while self.slots[slot] is not None \
+                    and self._steps_left[slot] > 0 \
+                    and not self._ensure_writable(
+                        slot, int(self._host_pos[slot])):
+                victim = self._preempt_lowest(protect=extra)
+                if victim is None or victim == slot:
+                    break
+
+    def _preempt_lowest(self, protect: Optional[int] = None
+                        ) -> Optional[int]:
+        """Preempt the lowest-priority live lane (latest submit wins the
+        axe, uid as tie-break) excluding ``protect``; returns the slot
+        preempted, or None when no candidate exists."""
+        victim = None
+        key = None
+        for slot, req in enumerate(self.slots):
+            if req is None or slot == protect:
+                continue
+            k = (req.submitted_at, req.uid, slot)
+            if key is None or k > key:
+                victim, key = slot, k
+        if victim is not None:
+            self._preempt(victim)
+        return victim
+
+    def _preempt(self, slot: int) -> None:
+        """vLLM-style recompute preemption: snapshot the lane's produced
+        tokens, fold them into the prompt, release every page, and
+        requeue at the FRONT of pending — re-admission recomputes the
+        whole (prompt + produced) prefix through the normal
+        prefill/prefix-cache path, so greedy output is token-identical
+        to an uninterrupted run."""
+        req = self.slots[slot]
+        if int(self._steps_left[slot]) <= 0:
+            # nothing left to decode — this is a retirement, not a preempt
+            self._retire_slot(slot, "length")
+            return
+        row, n, alive = jax.device_get(
+            (self.state["out_buf"][slot], self.state["out_len"][slot],
+             self.state["active"][slot]))
+        self.host_syncs += 1
+        n = int(n)
+        if not alive:
+            # the lane already hit EOS on device; retire it instead of
+            # recomputing a finished sequence
+            self._retire_slot(slot, "eos", _prefetched=(row, n))
+            return
+        produced = [int(t) for t in row[:n]]
+        req.output.extend(produced)
+        self.tokens_generated += n
+        req.prompt = list(req.prompt) + produced
+        req.max_new_tokens -= n
+        self.slots[slot] = None
+        self._steps_left[slot] = 0
+        self._set_stop_host(slot, None)
+        self.state = self._deactivate_fn(self.state, jnp.int32(slot))
+        if self._paged:
+            self._release_lane_pages(slot)
+        self.pending.appendleft(req)
+        self.preemptions += 1
 
     def _release_lane_pages(self, slot: int) -> None:
         """Drop the lane's reference on every page in its table row and
@@ -489,7 +637,19 @@ class ContinuousBatchingScheduler:
                 f"request {request.uid}: max_new_tokens="
                 f"{request.max_new_tokens} exceeds scheduler cap "
                 f"{self.max_new_cap}")
+        if len(self._stop_set(request)) > self.max_stop_tokens:
+            raise ValueError(
+                f"request {request.uid}: {len(self._stop_set(request))} "
+                f"stop tokens exceed max_stop_tokens="
+                f"{self.max_stop_tokens}")
         plen = self._bucket(len(request.prompt))
+        # the last decode step writes KV at position plen + max_new - 2
+        # (the final sampled token is never fed back), so any request
+        # with plen + max_new_tokens - 1 > window would wrap the cache
+        # mid-decode and corrupt its own prefix.  Families whose window
+        # wraps by design (rglru's local attention) or that have no KV
+        # ring at all (rwkv6) set RING_WRAP_SAFE and skip the guard.
+        wrap_safe = getattr(self.mod, "RING_WRAP_SAFE", False)
         if self._paged:
             # pool-capacity guard (the old cache_len bound is obsolete:
             # a lane's logical window wraps at pages_per_lane * page_size
@@ -500,6 +660,13 @@ class ContinuousBatchingScheduler:
                     f"{len(request.prompt)} (padded to {plen}) exceeds "
                     f"the paged lane capacity {self._capacity} "
                     f"({self.pages_per_lane} pages x {self.page_size})")
+            if not wrap_safe and \
+                    plen + request.max_new_tokens - 1 > self._capacity:
+                raise ValueError(
+                    f"request {request.uid}: prompt ({plen} padded) + "
+                    f"max_new_tokens ({request.max_new_tokens}) would "
+                    f"wrap the paged window ({self._capacity}) mid-decode "
+                    "and corrupt the prompt prefix; shrink one of them")
             need = min(-(-(plen + request.max_new_tokens)
                          // self.page_size), self.pages_per_lane)
             if need > self.num_pages - 1:
@@ -513,7 +680,33 @@ class ContinuousBatchingScheduler:
                 f"{len(request.prompt)} (padded to {plen} by the prefill "
                 f"bucket) exceeds cache_len={self.cache_len} — the ring "
                 f"cache would wrap during prefill and corrupt the prefix")
+        elif not wrap_safe and \
+                plen + request.max_new_tokens - 1 > self.cache_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({plen} padded) + "
+                f"max_new_tokens ({request.max_new_tokens}) would wrap "
+                f"the ring cache (cache_len={self.cache_len}) mid-decode "
+                "and corrupt the prompt prefix; shrink one of them")
         self.pending.append(request)
+
+    def _stop_set(self, req: Request) -> frozenset:
+        stops = set(req.stop_tokens or ())
+        if self.eos_id is not None:
+            stops.add(self.eos_id)
+        return frozenset(stops)
+
+    def _stop_row(self, req: Request) -> jnp.ndarray:
+        row = np.full((self.max_stop_tokens,), -1, np.int32)
+        stops = sorted(self._stop_set(req))
+        row[:len(stops)] = stops
+        return jnp.asarray(row)
+
+    def _set_stop_host(self, slot: int, req: Optional[Request]) -> None:
+        """Mirror a lane's stop set on the host so the periodic done-mask
+        fetch can be skipped entirely when no live lane could stop."""
+        stops = self._stop_set(req) if req is not None else frozenset()
+        self._stop_sets[slot] = stops
+        self._has_stops[slot] = bool(stops)
 
     def _bucket(self, plen: int) -> int:
         if self.prefill_buckets is None:
@@ -523,40 +716,73 @@ class ContinuousBatchingScheduler:
                 return b
         return plen
 
-    def _admit_pending(self) -> None:
+    def _admit_pending(self) -> bool:
         t0 = time.perf_counter()
         admitted = False
+        defer = False
         for slot in range(self.max_slots):
-            if not self.pending or self.slots[slot] is not None:
-                continue
-            req = self.pending.popleft()
-            plen = self._bucket(len(req.prompt))
-            toks = np.full((1, plen), self.pad_id, np.int32)
-            toks[0, plen - len(req.prompt):] = req.prompt    # left-pad
-            if self._paged:
-                if not self._admit_paged_host(req, slot, toks, plen):
-                    # pool pressure: requeue and stop admitting — running
-                    # lanes retire and release pages
-                    self.pending.appendleft(req)
-                    break
-            else:
-                self.state = self._admit_fn(
-                    self.params, self.state, jnp.asarray(toks),
-                    jnp.int32(slot), jnp.float32(req.temperature),
-                    jnp.int32(req.max_new_tokens), plen=plen)
-            self.slots[slot] = req
-            # the sampled-at-prefill first token is output token #1
-            self._steps_left[slot] = req.max_new_tokens - 1
-            admitted = True
+            if defer:
+                break
+            while not defer and self.pending \
+                    and self.slots[slot] is None:
+                req = self.pending.popleft()
+                # drop requests cancelled or expired while queued —
+                # before any device work or page refs
+                if req.uid in self._cancel_requested:
+                    self._cancel_requested.discard(req.uid)
+                    self._finish_dropped(req, "cancelled")
+                    continue
+                if self._deadline_expired(req):
+                    self._finish_dropped(req, "timeout")
+                    continue
+                if self.faults is not None:
+                    self.faults.on_admission(req, tick=self._tick_no,
+                                             scheduler=self)
+                    if req.uid in self._cancel_requested:
+                        self._cancel_requested.discard(req.uid)
+                        self._finish_dropped(req, "cancelled")
+                        continue
+                plen = self._bucket(len(req.prompt))
+                toks = np.full((1, plen), self.pad_id, np.int32)
+                toks[0, plen - len(req.prompt):] = req.prompt  # left-pad
+                if self._paged:
+                    verdict = self._admit_paged_host(req, slot, toks, plen)
+                    if verdict == "dropped":
+                        continue               # cancelled mid-admission
+                    if verdict == "defer":
+                        # pool pressure: requeue and stop admitting —
+                        # running lanes retire and release pages
+                        self.pending.appendleft(req)
+                        defer = True
+                        break
+                else:
+                    self.state = self._admit_fn(
+                        self.params, self.state, jnp.asarray(toks),
+                        jnp.int32(slot), jnp.float32(req.temperature),
+                        jnp.int32(req.max_new_tokens),
+                        self._stop_row(req), plen=plen)
+                self.slots[slot] = req
+                self._set_stop_host(slot, req)
+                # the sampled-at-prefill first token is output token #1
+                self._steps_left[slot] = req.max_new_tokens - 1
+                admitted = True
+                break
         if admitted:
             self.prefill_s += time.perf_counter() - t0
+        return admitted
 
     def _admit_paged_host(self, req: Request, slot: int, toks: np.ndarray,
-                          plen: int) -> bool:
+                          plen: int) -> str:
         """Paged admission: prefix-cache lookup first (map shared pages
         read-only and prefill only the suffix), else allocate pages and
-        run the full prefill + splice.  Returns False to defer when the
-        pool cannot supply the pages even after LRU eviction."""
+        run the full prefill + splice.
+
+        Returns ``"ok"``, ``"defer"`` (pool cannot supply the pages even
+        after LRU eviction and preemption — requeue), or ``"dropped"``
+        (cancelled mid-admission — request finished, do not requeue).
+        Both failure paths fully unwind: every ref this admission took
+        is released and the counters roll back, so an aborted prefix-hit
+        leaks nothing."""
         ps = self.page_size
         npages = self.pages_per_lane if self._alloc_mode == "full" \
             else -(-plen // ps)
@@ -583,29 +809,57 @@ class ContinuousBatchingScheduler:
                                              jnp.asarray(row))
             # suffix prefill: one batched step per remaining prompt token
             logits = None
+            aborted = None
             for i in range(t, plen):
+                if self.faults is not None:
+                    self.faults.on_suffix_step(req, slot, i,
+                                               tick=self._tick_no,
+                                               scheduler=self)
+                if req.uid in self._cancel_requested:
+                    self._cancel_requested.discard(req.uid)
+                    aborted = "dropped"
+                    break
                 self._prepare_writes(extra=slot)
-                self._ensure_writable(slot, i)
+                while not self._ensure_writable(slot, i, site="suffix:"):
+                    if self._preempt_lowest(protect=slot) is None:
+                        aborted = "defer"
+                        break
+                if aborted:
+                    break
                 logits, self.state = self._suffix_step_fn(
                     self.params, self.state, jnp.int32(toks[0, i]),
                     jnp.int32(slot), jnp.int32(i))
+            if aborted:
+                # unwind: drop every ref this lane holds (shared pages
+                # it mapped AND pages the suffix loop allocated/COW'd)
+                # and roll the admission counters back
+                self._release_lane_pages(slot)
+                self.admissions -= 1
+                self.prefix_hits -= 1
+                self.prefill_tokens_total -= plen
+                self.prefill_tokens_saved -= t
+                if aborted == "dropped":
+                    self._finish_dropped(req, "cancelled")
+                return aborted
             self.state = self._finalize_admit_fn(
                 self.state, logits, jnp.int32(slot),
                 jnp.float32(req.temperature),
-                jnp.int32(req.max_new_tokens), jnp.int32(plen))
+                jnp.int32(req.max_new_tokens), jnp.int32(plen),
+                self._stop_row(req))
         else:
-            pages = self._alloc_pages(npages)
+            pages = self._alloc_pages(npages, site="admission", slot=slot)
             if pages is None:
                 self.admissions -= 1
                 self.prefill_tokens_total -= plen
-                return False
+                return "defer"
             self._pt_host[slot] = 0
             self._pt_host[slot, :npages] = pages
             self.state = self._admit_paged_fn(
                 self.params, self.state, jnp.asarray(toks),
                 jnp.int32(slot), jnp.float32(req.temperature),
                 jnp.int32(req.max_new_tokens),
-                jnp.asarray(pages, jnp.int32), plen=plen)
+                jnp.asarray(pages, jnp.int32), self._stop_row(req),
+                plen=plen)
         self._host_pos[slot] = plen
         if self.prefix_sharing:
             # publish this lane's page-aligned prefixes (and the full
@@ -615,22 +869,121 @@ class ContinuousBatchingScheduler:
             self.pool.prefix_register(
                 key_tokens,
                 [int(p) for p in self._pt_host[slot, :span_full]])
-        return True
+        return "ok"
+
+    def _retire_slot(self, slot: int, reason: str,
+                     _prefetched=None) -> None:
+        """Finish the request on ``slot``: fetch its produced tokens in
+        ONE device->host transfer, record its finish reason, free its
+        lane (and pages), and tally the lifecycle counters."""
+        req = self.slots[slot]
+        if _prefetched is not None:
+            row, n = _prefetched
+        else:
+            row, n = jax.device_get((self.state["out_buf"][slot],
+                                     self.state["out_len"][slot]))
+            self.host_syncs += 1
+        n = int(n)
+        produced = [int(t) for t in row[:n]]
+        req.output.extend(produced)
+        self.tokens_generated += n
+        if reason == "length" and produced \
+                and produced[-1] in self._stop_sets[slot]:
+            # the lane sampled EOS on its final budgeted step (or the
+            # periodic mask check hadn't run yet) — the budget is spent
+            # but the sequence still terminated properly
+            reason = "eos"
+        if reason == "eos":
+            self.eos_finishes += 1
+            self.eos_steps_saved += max(req.max_new_tokens - n, 0)
+        elif reason == "cancelled":
+            self.cancellations += 1
+        elif reason == "timeout":
+            self.deadline_misses += 1
+        if reason in ("cancelled", "timeout"):
+            # the lane may still be active on device: mask it out so its
+            # writes stop before the slot is reused
+            self.state = self._deactivate_fn(self.state, jnp.int32(slot))
+        req.finish_reason = reason
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.finish_reasons[reason] = self.finish_reasons.get(reason, 0) + 1
+        self.slots[slot] = None
+        self._steps_left[slot] = 0
+        self._set_stop_host(slot, None)
+        if self._paged:
+            self._release_lane_pages(slot)
 
     def _retire_finished(self) -> None:
         for slot, req in enumerate(self.slots):
             if req is None or self._steps_left[slot] > 0:
                 continue
-            # ONE device->host transfer per request: its output row
-            row = np.asarray(self.state["out_buf"][slot])
-            self.host_syncs += 1
-            req.output = [int(t) for t in row[:req.max_new_tokens]]
-            req.done = True
-            req.finished_at = time.perf_counter()
-            self.tokens_generated += len(req.output)
-            self.slots[slot] = None
-            if self._paged:
-                self._release_lane_pages(slot)
+            self._retire_slot(slot, "length")
+
+    def _finish_dropped(self, req: Request, reason: str) -> None:
+        """Finish a request that never reached a lane (cancelled or
+        expired while pending) — no device state to unwind."""
+        req.finish_reason = reason
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.finish_reasons[reason] = self.finish_reasons.get(reason, 0) + 1
+        if reason == "cancelled":
+            self.cancellations += 1
+        elif reason == "timeout":
+            self.deadline_misses += 1
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request by uid.  A pending request is dropped before
+        it ever touches the device; a live lane is retired immediately
+        (releasing its pages).  Unknown uids are remembered and consumed
+        if the request shows up later (e.g. cancel raced an admission).
+        Returns True when the request was found and finished now."""
+        for r in self.pending:
+            if r.uid == uid:
+                # identity-based removal: Request is a dataclass with
+                # field equality, and two requests can be field-equal
+                self.pending = deque(x for x in self.pending if x is not r)
+                self._finish_dropped(r, "cancelled")
+                return True
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.uid == uid:
+                self._retire_slot(slot, "cancelled")
+                return True
+        self._cancel_requested.add(uid)
+        return False
+
+    def _deadline_expired(self, req: Request) -> bool:
+        return req.deadline_s is not None and \
+            time.perf_counter() - req.submitted_at > req.deadline_s
+
+    def _expire_deadlines(self) -> None:
+        for slot, req in enumerate(self.slots):
+            if req is not None and self._deadline_expired(req):
+                self._retire_slot(slot, "timeout")
+        expired = [r for r in self.pending if self._deadline_expired(r)]
+        if expired:
+            self.pending = deque(x for x in self.pending
+                                 if not any(x is r for r in expired))
+            for r in expired:
+                self._finish_dropped(r, "timeout")
+
+    def _reconcile_eos(self) -> None:
+        """Periodic done-mask fetch: retire lanes whose device-side stop
+        check already cleared their active bit.  Skipped entirely unless
+        some live mid-decode lane has a non-empty stop set, so stop-free
+        workloads keep strict zero host syncs per token; when it runs it
+        is ONE small (B,) bool transfer per ``eos_check_interval`` ticks,
+        counted in ``mask_syncs``."""
+        if not any(self._has_stops[s] and self.slots[s] is not None
+                   and self._steps_left[s] > 0
+                   for s in range(self.max_slots)):
+            return
+        alive = np.asarray(self.state["active"])
+        self.mask_syncs += 1
+        for slot, req in enumerate(self.slots):
+            if req is not None and self._steps_left[slot] > 0 \
+                    and self._has_stops[slot] and not alive[slot]:
+                self._retire_slot(slot, "eos")
 
     def tick(self) -> bool:
         """Admit pending requests, advance every active lane one token,
@@ -639,15 +992,25 @@ class ContinuousBatchingScheduler:
         ``decode_s`` covers step dispatch AND retirement fetches — the
         fetch is where JAX's async dispatch settles, so excluding it
         would credit the scheduler with near-zero decode time."""
-        self._admit_pending()
+        self._tick_no += 1
+        # progress snapshot for the no-progress watchdog
+        marker = (self.host_syncs, self.preemptions, self.cancellations,
+                  self.deadline_misses, len(self.pending))
+        if self.faults is not None:
+            self.faults.on_step(self._tick_no, self)
+        self._expire_deadlines()
+        admitted = self._admit_pending()
         t0 = time.perf_counter()
         worked = False
         if any(self._steps_left[s] > 0 for s, r in enumerate(self.slots)
                if r is not None):
             if self._paged:
                 # every writing lane must own its target page before the
-                # step lands (first-touch allocation / copy-on-write)
+                # step lands (first-touch allocation / copy-on-write) —
+                # this can preempt lanes, so re-check below
                 self._prepare_writes()
+        if any(self._steps_left[s] > 0 for s, r in enumerate(self.slots)
+               if r is not None):
             self.state = self._step_fn(self.params, self.state)
             for slot, req in enumerate(self.slots):
                 if req is not None and self._steps_left[slot] > 0:
@@ -655,11 +1018,39 @@ class ContinuousBatchingScheduler:
                     if self._paged:
                         self._host_pos[slot] += 1
             worked = True
+        if worked and self._tick_no % self.eos_check_interval == 0:
+            self._reconcile_eos()
         syncs = self.host_syncs
         self._retire_finished()
         if worked or self.host_syncs > syncs:
             self.decode_s += time.perf_counter() - t0
-        return bool(self.pending) or any(r is not None for r in self.slots)
+        busy = bool(self.pending) or any(r is not None for r in self.slots)
+        progressed = admitted or worked or marker != (
+            self.host_syncs, self.preemptions, self.cancellations,
+            self.deadline_misses, len(self.pending))
+        if busy and not progressed:
+            self._stall_ticks += 1
+            if self._stall_ticks >= self.watchdog_ticks:
+                self._raise_stalled()
+        else:
+            self._stall_ticks = 0
+        return busy
+
+    def _raise_stalled(self) -> None:
+        lanes = [f"slot {s}: uid={r.uid} steps_left="
+                 f"{int(self._steps_left[s])}"
+                 + (f" pos={int(self._host_pos[s])}" if self._paged else "")
+                 for s, r in enumerate(self.slots) if r is not None]
+        free = self.pool.available() if self._paged else None
+        raise RuntimeError(
+            f"scheduler made no progress for {self._stall_ticks} "
+            f"consecutive ticks (tick {self._tick_no}): no admission, "
+            f"no decode step, no retirement.  Live lanes: "
+            f"{lanes or 'none'}; pending uids: "
+            f"{[r.uid for r in self.pending]}; free pages: {free}.  "
+            "This usually means host bookkeeping desynced from device "
+            "state, or the pool cannot fit any pending request "
+            f"(num_pages={getattr(self, 'num_pages', None)}).")
 
     def run(self) -> None:
         """Drive to idle: every submitted request generated and retired."""
@@ -708,8 +1099,48 @@ class ContinuousBatchingScheduler:
                 self.prefill_tokens_saved / self.prefill_tokens_total
                 if self.prefill_tokens_total else 0.0),
             "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
             "kv_bytes_resident": self.kv_bytes_resident(),
             "free_pages": (self.pool.available() if self._paged else None),
             "prefix_entries": (self.pool.prefix_entries()
                                if self._paged else 0),
         }
+
+    def lifecycle_stats(self) -> Dict[str, Any]:
+        """Request-lifecycle counters: preemption recovery, device-side
+        EOS savings, deadline misses, cancellations, and the done-mask
+        fetch count the EOS mirror cost."""
+        return {
+            "preemptions": self.preemptions,
+            "eos_finishes": self.eos_finishes,
+            "eos_steps_saved": self.eos_steps_saved,
+            "deadline_misses": self.deadline_misses,
+            "cancellations": self.cancellations,
+            "mask_syncs": self.mask_syncs,
+            "finish_reasons": dict(self.finish_reasons),
+            "stall_ticks": self._stall_ticks,
+        }
+
+    def audit_pages(self) -> None:
+        """Assert the pool-refcount invariant: every page's refcount
+        equals (1 for the garbage page) + (1 per live lane mapping it)
+        + (1 per prefix-cache entry spanning it).  Raises AssertionError
+        on any mismatch — the refcount-leak canary the fault-injection
+        suite runs after every degraded path."""
+        if not self._paged:
+            return
+        expected = np.zeros(self.num_pages, np.int64)
+        expected[GARBAGE_PAGE] = 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            for phys in self._pt_host[slot]:
+                if int(phys) != GARBAGE_PAGE:
+                    expected[int(phys)] += 1
+        expected += self.pool.entry_page_refs()
+        actual = np.asarray(self.pool.refcount, np.int64)
+        if not np.array_equal(expected, actual):
+            bad = np.nonzero(expected != actual)[0]
+            raise AssertionError(
+                f"refcount leak: pages {bad.tolist()} expected "
+                f"{expected[bad].tolist()} got {actual[bad].tolist()}")

@@ -68,7 +68,12 @@ class ServingEngine:
                  kv_dtype: Optional[str] = None,
                  kv_layout: str = "ring", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 eos_id: Optional[int] = None,
+                 max_stop_tokens: int = 4,
+                 eos_check_interval: int = 8,
+                 watchdog_ticks: int = 256,
+                 faults=None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -86,6 +91,13 @@ class ServingEngine:
         self.page_size = page_size
         self.num_pages = num_pages
         self.prefix_sharing = prefix_sharing
+        # request lifecycle: device-side EOS, deadlines/cancel, watchdog,
+        # and the fault-injection hook (see runtime.faults)
+        self.eos_id = eos_id
+        self.max_stop_tokens = max_stop_tokens
+        self.eos_check_interval = eos_check_interval
+        self.watchdog_ticks = watchdog_ticks
+        self.faults = faults
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -125,9 +137,20 @@ class ServingEngine:
                 kv_layout=self.kv_layout,
                 page_size=self.page_size,
                 num_pages=self.num_pages,
-                prefix_sharing=self.prefix_sharing)
+                prefix_sharing=self.prefix_sharing,
+                eos_id=self.eos_id,
+                max_stop_tokens=self.max_stop_tokens,
+                eos_check_interval=self.eos_check_interval,
+                watchdog_ticks=self.watchdog_ticks,
+                faults=self.faults)
             self._sched.pending.extend(pending)
         return self._sched
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a submitted request by uid (see scheduler.cancel)."""
+        if self._sched is None:
+            return False
+        return self._sched.cancel(uid)
 
     def generate_batch(self, requests: List[Request]) -> GenStats:
         """Run requests to completion through the continuous scheduler.

@@ -240,7 +240,8 @@ def test_submit_rejects_on_pool_capacity(tiny_sched_family):
     s = _sched(cfg, params, kv_layout="paged", page_size=16)
     with pytest.raises(ValueError, match="capacity"):
         s.submit(Request(uid=0, prompt=[1] * 80, max_new_tokens=4))
-    s.submit(Request(uid=1, prompt=[1] * 64, max_new_tokens=4))  # == cap
+    # plen + max_new - 1 == capacity fits without wrapping the window
+    s.submit(Request(uid=1, prompt=[1] * 61, max_new_tokens=4))
     s.run()
     with pytest.raises(ValueError, match="num_pages"):
         _sched(cfg, params, kv_layout="paged", page_size=16,

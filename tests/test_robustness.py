@@ -1,0 +1,471 @@
+"""Request-lifecycle robustness: preempt-and-requeue under pool
+pressure, device-side EOS early exit, deadlines/cancellation, and the
+fault-injection harness.
+
+The load-bearing guarantees:
+
+  * a fault-injected pool exhaustion at ANY decode step never escapes
+    ``tick()`` — the lowest-priority lane is preempted, requeued, and
+    recomputes to a token-identical greedy output,
+  * a lane that samples EOS stops decoding early with
+    ``finish_reason="eos"`` WITHOUT giving up zero host syncs per token
+    (the periodic done-mask fetch is counted separately and skipped
+    entirely for stop-free workloads),
+  * cancel/deadline retire lanes and drop pending requests releasing
+    every page reference,
+  * after any admit/preempt/cancel/retire storm the pool refcounts
+    reconcile exactly (``audit_pages``) and a drained scheduler returns
+    the pool to its initial free count.
+"""
+import time
+
+import jax
+import pytest
+
+from repro import models
+from repro.configs.base import get_config, reduced
+from repro.runtime.faults import AllocFault, FaultInjector, ScriptedFaults
+from repro.runtime.scheduler import ContinuousBatchingScheduler, Request
+from repro.serving.engine import ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = models.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("max_new_cap", 16)
+    return ContinuousBatchingScheduler(cfg, params, **kw)
+
+
+def _greedy_baseline(cfg, params, prompts, max_new=8, **kw):
+    s = _sched(cfg, params, **kw)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    return [list(r.output) for r in reqs]
+
+
+# prompts long enough (plen 14) that decode crosses a page boundary —
+# first-touch allocation actually happens mid-decode
+P0 = [3] + [5, 7] * 6 + [11]
+P1 = [4] + [5, 7] * 6 + [11]
+
+
+# ---------------------------------------------------------------------------
+# device-side EOS / stop tokens
+# ---------------------------------------------------------------------------
+
+def test_eos_early_exit_matches_truncated_baseline(tiny):
+    """With eos_id set to a token the greedy stream provably emits, the
+    request finishes at that token with the exact truncated output and
+    the saved budget is counted."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [[3, 5, 7]])[0]
+    eos = base[3]                       # emitted at step 3 of 8
+    cut = base.index(eos)
+    r = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=8)
+    s = _sched(cfg, params, eos_id=eos, eos_check_interval=2)
+    s.submit(r)
+    s.run()
+    assert r.output == base[:cut + 1]   # stop token IS in the output
+    assert r.finish_reason == "eos"
+    assert r.done
+    stats = s.lifecycle_stats()
+    assert stats["eos_finishes"] == 1
+    assert stats["eos_steps_saved"] == 8 - (cut + 1)
+    assert stats["mask_syncs"] >= 1
+
+
+def test_per_request_stop_tokens(tiny):
+    """Request.stop_tokens works without a scheduler-wide eos_id, and a
+    stop-free request sharing the batch is unaffected."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [[3, 5, 7], [4, 5, 7]])
+    stop = base[0][2]
+    cut = base[0].index(stop)
+    ra = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=8,
+                 stop_tokens=[stop])
+    rb = Request(uid=1, prompt=[4, 5, 7], max_new_tokens=8)
+    s = _sched(cfg, params, eos_check_interval=2)
+    s.submit(ra)
+    s.submit(rb)
+    s.run()
+    assert ra.output == base[0][:cut + 1]
+    assert ra.finish_reason == "eos"
+    assert rb.output == base[1]
+    assert rb.finish_reason == "length"
+
+
+def test_eos_frees_lane_for_pending(tiny):
+    """An early-stopped lane's slot is reclaimed by the waiting queue
+    before the stopped request's full budget would have elapsed."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [[3, 5, 7]], max_new=16)[0]
+    eos = base[2]
+    reqs = [Request(uid=0, prompt=[3, 5, 7], max_new_tokens=16),
+            Request(uid=1, prompt=[4, 5, 7], max_new_tokens=4)]
+    s = _sched(cfg, params, max_slots=1, eos_id=eos, eos_check_interval=2)
+    for r in reqs:
+        s.submit(r)
+    ticks = 0
+    while s.tick():
+        ticks += 1
+        assert ticks < 64
+    assert reqs[0].finish_reason == "eos"
+    assert reqs[1].finish_reason in ("length", "eos")
+    assert all(r.done for r in reqs)
+    # 16 budgeted + 4: without EOS the single lane needs > 20 ticks
+    assert ticks < 20
+
+
+def test_stop_free_workload_keeps_zero_syncs(tiny):
+    """No stop tokens anywhere -> the done-mask fetch never runs and the
+    decode loop still performs zero device->host transfers."""
+    cfg, params = tiny
+    s = _sched(cfg, params, eos_check_interval=1)
+    for uid in range(2):
+        s.submit(Request(uid=uid, prompt=[1 + uid, 2, 3],
+                         max_new_tokens=12))
+    s.tick()
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(8):
+            s.tick()
+    assert s.host_syncs == 0
+    assert s.mask_syncs == 0
+    s.run()
+    assert s.host_syncs == 2
+    assert s.mask_syncs == 0
+
+
+def test_mask_sync_budget_bounded(tiny):
+    """With stops present the mirror costs at most one small fetch per
+    eos_check_interval ticks — not one per token."""
+    cfg, params = tiny
+    s = _sched(cfg, params, eos_id=0, eos_check_interval=4)
+    s.submit(Request(uid=0, prompt=[3, 5, 7], max_new_tokens=16))
+    ticks = 0
+    while s.tick():
+        ticks += 1
+    assert s.mask_syncs <= ticks // 4 + 1
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-requeue under pool pressure
+# ---------------------------------------------------------------------------
+
+def test_preemption_recovers_token_identical(tiny):
+    """Pool exhaustion at a mid-decode first touch preempts the
+    lowest-priority lane; every request still completes with the exact
+    greedy output of an unpressured run, and nothing leaks."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [P0, P1], kv_layout="paged",
+                            page_size=16)
+    faults = ScriptedFaults(
+        alloc=[AllocFault(site="first_touch", after_tick=2)])
+    s = _sched(cfg, params, kv_layout="paged", page_size=16, faults=faults)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate([P0, P1])]
+    for r in reqs:
+        s.submit(r)
+    s.run()                              # no RuntimeError escapes
+    assert faults.fired, "the injected fault must actually fire"
+    assert s.preemptions >= 1
+    assert s.paged_stats()["preemptions"] == s.preemptions
+    assert [list(r.output) for r in reqs] == base
+    assert all(r.finish_reason == "length" for r in reqs)
+    s.audit_pages()
+    s.pool.leak_check()
+
+
+def test_preemption_at_cow_site(tiny):
+    """Exhaustion during a copy-on-write (two lanes forked off a shared
+    prefix) also degrades to preemption, not a crash."""
+    cfg, params = tiny
+    shared = [2, 4, 6, 8] * 4            # 16 tokens = exactly one page
+    pa, pb = shared + [3], shared + [9]
+    base = _greedy_baseline(cfg, params, [pa, pb], kv_layout="paged",
+                            page_size=16)
+    faults = ScriptedFaults(alloc=[AllocFault(site="cow", after_tick=1)])
+    s = _sched(cfg, params, kv_layout="paged", page_size=16, faults=faults)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate([pa, pb])]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    assert s.preemptions >= 1 or not faults.fired
+    assert [list(r.output) for r in reqs] == base
+    s.audit_pages()
+    s.pool.leak_check()
+
+
+def test_self_preemption_single_lane(tiny):
+    """When the writing lane is itself the only candidate it preempts
+    itself — releasing its own pages, re-admitting, and still finishing
+    with the uninterrupted output."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [P0], kv_layout="paged",
+                            page_size=16, max_slots=1)
+    faults = ScriptedFaults(
+        alloc=[AllocFault(site="first_touch", after_tick=2)])
+    s = _sched(cfg, params, max_slots=1, kv_layout="paged", page_size=16,
+               faults=faults)
+    r = Request(uid=0, prompt=list(P0), max_new_tokens=8)
+    s.submit(r)
+    s.run()
+    assert s.preemptions == 1
+    assert list(r.output) == base[0]
+    s.audit_pages()
+    s.pool.leak_check()
+
+
+def test_suffix_prefill_unwinds_refs_on_pressure(tiny):
+    """A prefix-hit admission whose suffix prefill hits pool exhaustion
+    with nothing to preempt unwinds every ref it took and requeues —
+    the retry then completes with the baseline output (satellite 2)."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [P0], kv_layout="paged",
+                            page_size=16, max_slots=1)
+    faults = ScriptedFaults(alloc=[AllocFault(site="suffix:",
+                                              after_tick=1)])
+    s = _sched(cfg, params, max_slots=1, kv_layout="paged", page_size=16,
+               faults=faults)
+    warm = Request(uid=0, prompt=list(P0), max_new_tokens=8)
+    s.submit(warm)
+    s.run()                              # cold admit, registers prefixes
+    assert list(warm.output) == base[0]
+    hit = Request(uid=1, prompt=list(P0), max_new_tokens=8)
+    s.submit(hit)
+    s.run()
+    assert any("suffix:" in f for f in faults.fired)
+    assert list(hit.output) == base[0]
+    assert hit.finish_reason == "length"
+    s.audit_pages()
+    s.pool.leak_check()
+
+
+# ---------------------------------------------------------------------------
+# cancellation and deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_pending_and_live(tiny):
+    cfg, params = tiny
+    s = _sched(cfg, params, max_slots=1)
+    live = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=12)
+    queued = Request(uid=1, prompt=[4, 5, 7], max_new_tokens=12)
+    s.submit(live)
+    s.submit(queued)
+    s.tick()                             # admits uid 0 only (one lane)
+    assert s.cancel(1)                   # still pending: dropped clean
+    assert queued.done and queued.finish_reason == "cancelled"
+    assert queued.output == []
+    s.tick()
+    assert s.cancel(0)                   # live: retired with partial out
+    assert live.done and live.finish_reason == "cancelled"
+    assert 0 < len(live.output) < 12
+    assert not s.tick()                  # fully idle
+    assert s.cancellations == 2
+
+
+def test_cancel_unknown_uid_consumed_at_admission(tiny):
+    """Cancelling a uid the scheduler hasn't seen is remembered and the
+    request is dropped the moment it shows up."""
+    cfg, params = tiny
+    s = _sched(cfg, params)
+    assert not s.cancel(7)               # nothing known yet
+    r = Request(uid=7, prompt=[3, 5, 7], max_new_tokens=8)
+    s.submit(r)
+    s.run()
+    assert r.done and r.finish_reason == "cancelled"
+    assert r.output == []
+
+
+def test_cancel_during_suffix_prefill(tiny):
+    """A cancel landing inside the suffix-prefill loop of a prefix-cache
+    hit aborts the admission, unwinds the shared-page refs, and finishes
+    the request as cancelled."""
+    cfg, params = tiny
+
+    def cancel_now(sched, req, slot, i):
+        # not pending (popped) and not yet on a lane: cancel() records
+        # the uid and the admission loop consumes it mid-suffix
+        assert sched.cancel(req.uid) is False
+
+    faults = ScriptedFaults(on_suffix=cancel_now)
+    s = _sched(cfg, params, max_slots=1, kv_layout="paged", page_size=16,
+               faults=None)
+    warm = Request(uid=0, prompt=list(P0), max_new_tokens=8)
+    s.submit(warm)
+    s.run()
+    s.faults = faults                    # arm only for the hit admission
+    victim = Request(uid=1, prompt=list(P0), max_new_tokens=8)
+    s.submit(victim)
+    s.run()
+    assert victim.done and victim.finish_reason == "cancelled"
+    assert victim.output == []
+    s.audit_pages()
+    s.pool.leak_check()
+
+
+def test_deadline_drops_pending_and_retires_live(tiny):
+    cfg, params = tiny
+    s = _sched(cfg, params, max_slots=1)
+    live = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=16,
+                   deadline_s=0.3)
+    queued = Request(uid=1, prompt=[4, 5, 7], max_new_tokens=4,
+                     deadline_s=0.0)     # expires immediately in queue
+    s.submit(live)
+    s.submit(queued)
+    s.tick()
+    assert queued.done and queued.finish_reason == "timeout"
+    s.tick()
+    time.sleep(0.35)
+    s.run()
+    assert live.done and live.finish_reason == "timeout"
+    assert 0 < len(live.output) < 16     # partial output is preserved
+    assert s.deadline_misses == 2
+
+
+# ---------------------------------------------------------------------------
+# watchdog + refcount invariants under a fault storm
+# ---------------------------------------------------------------------------
+
+def test_watchdog_names_the_stall(tiny):
+    """A pool that can never admit anything must surface as a diagnostic
+    error naming the stuck request, not an infinite spin (satellite 3)."""
+    cfg, params = tiny
+    faults = ScriptedFaults(
+        alloc=[AllocFault(site="admission", count=10**9)])
+    s = _sched(cfg, params, kv_layout="paged", page_size=16,
+               faults=faults, watchdog_ticks=10)
+    s.submit(Request(uid=42, prompt=[3, 5, 7], max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="no progress"):
+        s.run()
+    assert s._stall_ticks >= 10
+
+
+class _AuditingFaults(ScriptedFaults):
+    """Asserts the refcount invariant at EVERY tick of the storm."""
+
+    def on_step(self, tick, scheduler):
+        super().on_step(tick, scheduler)
+        scheduler.audit_pages()
+
+
+def test_refcount_invariant_through_fault_storm(tiny):
+    """Admit/preempt/cancel/retire driven by the injector: refcounts
+    reconcile at every step, and draining the scheduler (plus evicting
+    the retained prefix entries) returns the pool to its initial free
+    count (satellite 4)."""
+    cfg, params = tiny
+    storm = _AuditingFaults(
+        alloc=[AllocFault(site="first_touch", after_tick=3, count=2),
+               AllocFault(site="cow", after_tick=5, count=1)],
+        at_tick={4: lambda s: s.cancel(2),
+                 6: lambda s: s.cancel(99)})   # unknown uid too
+    s = _sched(cfg, params, max_slots=2, kv_layout="paged", page_size=16,
+               faults=storm)
+    free0 = s.pool.available()
+    shared = [2, 4, 6, 8] * 4
+    reqs = [Request(uid=0, prompt=list(P0), max_new_tokens=8),
+            Request(uid=1, prompt=shared + [3], max_new_tokens=8),
+            Request(uid=2, prompt=shared + [9], max_new_tokens=8),
+            Request(uid=3, prompt=list(P1), max_new_tokens=8,
+                    deadline_s=30.0)]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    assert all(r.done for r in reqs)
+    done_reasons = {r.uid: r.finish_reason for r in reqs}
+    assert done_reasons[2] == "cancelled"
+    s.audit_pages()
+    s.pool.leak_check()
+    while s.pool.evict_one():            # drop retained prefix entries
+        pass
+    assert s.pool.available() == free0
+    s.pool.leak_check()
+
+
+# ---------------------------------------------------------------------------
+# ring wrap guard (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_ring_wrap_guard_rejects_mid_decode_wrap(tiny):
+    cfg, params = tiny
+    s = _sched(cfg, params)              # cache_len=64
+    # 61 + 4 - 1 == 64: last decode write lands exactly on the rim
+    s.submit(Request(uid=0, prompt=[1] * 61, max_new_tokens=4))
+    with pytest.raises(ValueError, match="wrap"):
+        s.submit(Request(uid=1, prompt=[1] * 62, max_new_tokens=4))
+    # a bucket that pads to the rim counts too
+    sb = _sched(cfg, params, prefill_buckets=[62])
+    with pytest.raises(ValueError, match="wrap"):
+        sb.submit(Request(uid=3, prompt=[1] * 10, max_new_tokens=4))
+
+
+def test_wrap_guard_skipped_for_wrap_safe_families():
+    """rglru's local window wraps by design and rwkv6 has no KV ring —
+    long generations must stay accepted there."""
+    for arch in ("recurrentgemma-9b", "rwkv6-3b"):
+        cfg = reduced(get_config(arch))
+        mod = models.get_module(cfg)
+        assert getattr(mod, "RING_WRAP_SAFE", False), arch
+
+
+def test_wrap_guard_allows_max_new_one_at_full_cache(tiny):
+    cfg, params = tiny
+    s = _sched(cfg, params)
+    s.submit(Request(uid=0, prompt=[1] * 64, max_new_tokens=1))
+
+
+# ---------------------------------------------------------------------------
+# engine wiring
+# ---------------------------------------------------------------------------
+
+def test_engine_threads_lifecycle_knobs(tiny):
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [[3, 5, 7]])[0]
+    eos = base[3]
+    eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                        eos_id=eos, eos_check_interval=2)
+    r = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=8)
+    eng.generate_batch([r])
+    assert r.finish_reason == "eos"
+    assert r.output == base[:base.index(eos) + 1]
+    assert eng.scheduler().lifecycle_stats()["eos_finishes"] == 1
+    assert eng.cancel(123) is False      # unknown uid, no crash
+
+
+def test_finish_reason_defaults_to_length(tiny):
+    cfg, params = tiny
+    r = Request(uid=0, prompt=[3, 5, 7], max_new_tokens=6)
+    s = _sched(cfg, params)
+    s.submit(r)
+    s.run()
+    assert r.finish_reason == "length"
+    assert len(r.output) == 6
+
+
+def test_fault_injector_base_is_noop(tiny):
+    """Installing the no-op base class changes nothing."""
+    cfg, params = tiny
+    base = _greedy_baseline(cfg, params, [P0, P1], kv_layout="paged",
+                            page_size=16)
+    s = _sched(cfg, params, kv_layout="paged", page_size=16,
+               faults=FaultInjector())
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate([P0, P1])]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    assert [list(r.output) for r in reqs] == base
+    assert s.preemptions == 0

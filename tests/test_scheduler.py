@@ -388,8 +388,14 @@ def test_prompt_longer_than_cache_rejected(tiny):
     sched = _sched(cfg, params)                  # cache_len=64
     with pytest.raises(ValueError, match="cache_len"):
         sched.submit(Request(uid=0, prompt=[1] * 65, max_new_tokens=4))
-    # at exactly cache_len the ring does not wrap during prefill
-    sched.submit(Request(uid=1, prompt=[1] * 64, max_new_tokens=4))
+    # prompt + max_new - 1 == cache_len: the last decode write lands on
+    # the final ring slot without wrapping — accepted
+    sched.submit(Request(uid=1, prompt=[1] * 61, max_new_tokens=4))
+    # a full-cache_len prompt now needs max_new_tokens=1 (no decode
+    # writes beyond the prompt); anything more would wrap mid-decode
+    sched.submit(Request(uid=2, prompt=[1] * 64, max_new_tokens=1))
+    with pytest.raises(ValueError, match="wrap"):
+        sched.submit(Request(uid=3, prompt=[1] * 64, max_new_tokens=4))
 
 
 def test_bucket_padding_beyond_cache_rejected(tiny):

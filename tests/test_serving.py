@@ -103,10 +103,16 @@ def test_publish_load_roundtrip_transformer(tmp_path, tiny):
 
 
 def test_serving_engine_ring_cache_overflow(tiny):
-    """Generating past cache_len must stay finite (ring buffer wraps)."""
+    """Generating past cache_len would wrap the ring mid-decode and
+    corrupt the request's own prefix — rejected at submit time now
+    (PR 8 wrap guard); the largest wrap-free request is accepted."""
     cfg, params = tiny
     eng = ServingEngine(cfg, params, max_batch=1, cache_len=16)
-    r = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=24)  # 27 > 16
-    stats = eng.generate_batch([r])
-    assert len(r.output) == 24
-    assert all(0 <= t < cfg.vocab_size for t in r.output)
+    r = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=24)  # 26 > 16
+    with pytest.raises(ValueError, match="wrap"):
+        eng.generate_batch([r])
+    ok = Request(uid=1, prompt=[1, 2, 3], max_new_tokens=14)  # 16 == 16
+    eng.generate_batch([ok])
+    assert len(ok.output) == 14
+    assert ok.finish_reason == "length"
+    assert all(0 <= t < cfg.vocab_size for t in ok.output)

@@ -15,7 +15,11 @@ roofline):
   2. mid-flight admission: mixed prompt lengths, staggered arrivals,
      mixed generation lengths — the workload the aligned loop cannot
      express — reported as tokens/s,
-  3. per-token latency vs the Nielsen instant-response budget.
+  3. per-token latency vs the Nielsen instant-response budget,
+  4. Poisson-arrival traffic against the wall clock through a
+     telemetry-enabled paged scheduler: TTFT / inter-token / queue-time
+     p50+p99 land in ``BENCH_serving.json["telemetry"]`` and the
+     request-lifecycle Chrome trace in ``BENCH_serving_trace.json``.
 
 Every number lands in ``BENCH_serving.json`` (cwd) so the perf
 trajectory stays machine-readable across PRs; CI uploads the file as a
@@ -26,6 +30,7 @@ from __future__ import annotations
 import json
 import os
 import platform
+import time
 
 import numpy as np
 
@@ -35,9 +40,12 @@ from benchmarks.common import row
 from repro import models
 from repro.configs.base import get_config, reduced
 from repro.runtime.scheduler import ContinuousBatchingScheduler, Request
+from repro.runtime.telemetry import Telemetry
 from repro.serving.engine import ServingEngine
 
 OUT_PATH = os.environ.get("REPRO_BENCH_SERVING_JSON", "BENCH_serving.json")
+TRACE_PATH = os.environ.get("REPRO_SERVING_TRACE",
+                            "BENCH_serving_trace.json")
 
 
 def _requests(rng, n, *, plen=16, max_new=32, fixed_plen=True, temp=0.0):
@@ -269,7 +277,8 @@ def main():
     sched.submit(Request(uid=998, prompt=[1] * 12, max_new_tokens=2))
     sched.submit(Request(uid=997, prompt=[1] * 20, max_new_tokens=2))
     sched.run()
-    sched.tokens_generated = 0
+    sched.metrics.reset()                       # warmup boundary: one call
+    sched.tokens_generated = 0                  # zeroes the whole surface
     sched.host_syncs = 0
     sched.prefill_s = sched.decode_s = 0.0
 
@@ -303,6 +312,106 @@ def main():
     row("fits 100ms/token budget", "PASS" if per_tok_ms < 100 else "FAIL")
     print()
     out["midflight"] = sched.tokens_generated / max(busy, 1e-9)
+    msnap = sched.metrics.snapshot()            # always-on registry: the
+    # TTFT/ITL histograms exist on every scheduler, telemetry or not
+
+    # -- Poisson-arrival traffic + full telemetry (seeds the ROADMAP's ----
+    # SLO-grade bench): exponential inter-arrivals at a fixed rate, a
+    # short/medium/long prompt-length mixture, mixed output lengths —
+    # submitted against the wall clock so queueing is real.  The
+    # Telemetry bundle records the lifecycle trace (exported as a Chrome
+    # trace JSON, CI uploads it) and the TTFT / inter-token / queue-time
+    # histograms that become BENCH_serving.json["telemetry"].
+    n_poisson = 8 if smoke else 24
+    mean_gap_s = 0.05 if smoke else 0.08
+    tel = Telemetry()
+    psched = ContinuousBatchingScheduler(
+        cfg, params, max_slots=slots, cache_len=128, max_new_cap=64,
+        kv_layout="paged", page_size=16,
+        prefill_buckets=[16, 32, 64, 96], telemetry=tel)
+    for uid, wp in enumerate((8, 24, 64, 96)):  # warm every bucket + step
+        psched.submit(Request(uid=3900 + uid, prompt=[1] * wp,
+                              max_new_tokens=2))
+    psched.run()
+    tel.reset()                                 # also zeroes psched.metrics
+
+    prng = np.random.default_rng(11)
+
+    def _mix_prompt():
+        u = prng.random()
+        if u < 0.6:
+            plen = int(prng.integers(8, 17))        # short: chat turns
+        elif u < 0.9:
+            plen = int(prng.integers(24, 49))       # medium
+        else:
+            plen = int(prng.integers(64, 97))       # long-context tail
+        return list(prng.integers(1, 255, plen))
+
+    out_mix = (4, 8) if smoke else (8, 16, 32)
+    preqs = [Request(uid=3000 + i, prompt=_mix_prompt(),
+                     max_new_tokens=int(prng.choice(out_mix)))
+             for i in range(n_poisson)]
+    arrivals = np.cumsum(prng.exponential(mean_gap_s, n_poisson))
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < n_poisson and arrivals[i] <= now:
+            psched.submit(preqs[i])
+            i += 1
+        if not psched.tick():
+            if i >= n_poisson:
+                break
+            time.sleep(min(2e-3, max(arrivals[i] - now, 0.0)))
+    poisson_wall = time.perf_counter() - t0
+    snap = tel.metrics.snapshot()
+
+    def _ms(name, q):
+        return round(snap[name][q] * 1e3, 3)
+
+    row("poisson traffic", f"{n_poisson/poisson_wall:8.1f}", "req/s",
+        f"{n_poisson} reqs @ {1.0/mean_gap_s:.0f}/s offered, "
+        f"TTFT p50={_ms('req.ttft_s', 'p50')}ms "
+        f"p99={_ms('req.ttft_s', 'p99')}ms")
+    row("poisson latency", f"{_ms('req.itl_s', 'p50'):8.2f}", "ms ITL p50",
+        f"p99={_ms('req.itl_s', 'p99')}ms, queue "
+        f"p50={_ms('req.queue_s', 'p50')}ms, e2e "
+        f"p99={_ms('req.e2e_s', 'p99')}ms")
+    n_events = tel.export_chrome_trace(TRACE_PATH)
+    row("chrome trace", f"{n_events:8d}", "events",
+        f"-> {TRACE_PATH} (open in ui.perfetto.dev)")
+
+    def _hist_row(s, name):
+        h = s[name]
+        return {"p50_ms": round(h["p50"] * 1e3, 3),
+                "p99_ms": round(h["p99"] * 1e3, 3),
+                "mean_ms": round(h["mean"] * 1e3, 3),
+                "count": h["count"]}
+
+    telemetry_payload = {
+        "poisson": {
+            "requests": n_poisson,
+            "offered_rate_hz": round(1.0 / mean_gap_s, 2),
+            "wall_s": round(poisson_wall, 3),
+            "ttft": _hist_row(snap, "req.ttft_s"),
+            "itl": _hist_row(snap, "req.itl_s"),
+            "queue": _hist_row(snap, "req.queue_s"),
+            "e2e": _hist_row(snap, "req.e2e_s"),
+            "preemptions": int(snap.get("sched.preemptions", 0)),
+            "cow_copies": int(snap.get("sched.cow_copies", 0)),
+            "lru_evictions": int(snap.get("pool.evictions", 0)),
+            "finish_reasons": {
+                k[len("sched.finish."):]: v for k, v in snap.items()
+                if k.startswith("sched.finish.")},
+        },
+        "midflight": {
+            "ttft": _hist_row(msnap, "req.ttft_s"),
+            "itl": _hist_row(msnap, "req.itl_s"),
+            "queue": _hist_row(msnap, "req.queue_s"),
+        },
+        "trace_path": TRACE_PATH,
+        "trace_events": n_events,
+    }
 
     payload = {
         "benchmark": "serving",
@@ -339,6 +448,7 @@ def main():
             "cancellations": d_stats["cancellations"],
             "finish_reasons": d_stats["finish_reasons"],
         },
+        "telemetry": telemetry_payload,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -23,6 +23,7 @@ from repro import models
 from repro.checkpoint.ckpt import publish_checkpoint
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.modelstore import ModelStore
+from repro.runtime.telemetry import Telemetry
 from repro.serving.engine import MultiModelServer, Request
 
 
@@ -51,8 +52,12 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--aligned", action="store_true",
                     help="use the legacy aligned-batch loop (baseline)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record request-lifecycle telemetry and export a "
+                         "Chrome trace_event JSON here (open in Perfetto)")
     args = ap.parse_args()
     model_names = args.model or ["tinyllama-1.1b", "qwen3-0.6b"]
+    telemetry = Telemetry() if args.trace else None
 
     store = ModelStore(args.store)
     for m in model_names:
@@ -67,7 +72,8 @@ def main():
     server = MultiModelServer(store, max_resident=2,
                               max_batch=args.max_batch,
                               cache_len=args.cache_len,
-                              prefill_buckets=buckets)
+                              prefill_buckets=buckets,
+                              telemetry=telemetry)
     rng = np.random.default_rng(0)
     uid = 0
     for round_i, name in enumerate(model_names * 2):   # exercise hot swap
@@ -93,6 +99,12 @@ def main():
     hits, misses = server.cache.hits, server.cache.misses
     print(f"resident-cache: {hits} hits / {misses} misses "
           f"(resident: {server.cache.resident})")
+    if telemetry is not None:
+        n = telemetry.export_chrome_trace(args.trace)
+        ttft = telemetry.metrics.snapshot().get("req.ttft_s", {})
+        print(f"trace: {n} events -> {args.trace} "
+              f"(TTFT p50={ttft.get('p50', 0)*1e3:.1f}ms "
+              f"p99={ttft.get('p99', 0)*1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

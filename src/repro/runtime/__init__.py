@@ -8,6 +8,8 @@ continuous-batching decode scheduler built on top of it.
 from repro.runtime.base import CommandBuffer, DeviceRuntime
 from repro.runtime.faults import AllocFault, FaultInjector, ScriptedFaults
 from repro.runtime.scheduler import ContinuousBatchingScheduler
+from repro.runtime.telemetry import MetricsRegistry, Telemetry, Tracer
 
 __all__ = ["CommandBuffer", "DeviceRuntime", "ContinuousBatchingScheduler",
-           "FaultInjector", "AllocFault", "ScriptedFaults"]
+           "FaultInjector", "AllocFault", "ScriptedFaults",
+           "MetricsRegistry", "Telemetry", "Tracer"]

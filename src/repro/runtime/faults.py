@@ -28,13 +28,29 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.runtime.telemetry import PID_SCHED
+
 __all__ = ["FaultInjector", "AllocFault", "ScriptedFaults"]
 
 
 class FaultInjector:
     """No-op base class.  Subclass and override the hooks you need; the
     scheduler calls every hook unconditionally when an injector is
-    installed, so overrides must stay cheap."""
+    installed, so overrides must stay cheap.
+
+    When the owning scheduler runs with telemetry enabled it points
+    :attr:`telemetry` at its own :class:`~repro.runtime.telemetry.Telemetry`
+    bundle, so injectors can mark the trace timeline at the exact tick a
+    fault fired (``fault.*`` instant events on the scheduler track)."""
+
+    telemetry = None
+
+    def _emit(self, name: str, **args) -> None:
+        """Drop a ``fault.<name>`` instant on the scheduler trace track
+        (no-op when the scheduler runs without telemetry)."""
+        if self.telemetry is not None:
+            self.telemetry.tracer.instant(f"fault.{name}", pid=PID_SCHED,
+                                          tid=0, cat="fault", args=args)
 
     def on_alloc(self, site: str, *, tick: int, slot: Optional[int],
                  n: int) -> bool:
@@ -102,6 +118,8 @@ class ScriptedFaults(FaultInjector):
             rule.count -= 1
             self.fired.append(f"alloc_fail@{site} tick={tick} "
                               f"slot={slot} n={n}")
+            self._emit("alloc_fail", site=site, tick=tick,
+                       slot=-1 if slot is None else int(slot), n=int(n))
             return True
         return False
 
@@ -109,6 +127,7 @@ class ScriptedFaults(FaultInjector):
         fn = self.at_tick.pop(tick, None)
         if fn is not None:
             self.fired.append(f"action@tick={tick}")
+            self._emit("action", tick=tick)
             fn(scheduler)
 
     def on_suffix_step(self, req, slot: int, i: int, *, tick: int,

@@ -50,13 +50,18 @@ class PagePool:
     0, matching the device pool's leading axis.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, metrics=None):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         if page_size < 1:
             raise ValueError(f"bad page_size {page_size}")
         self.num_pages = num_pages
         self.page_size = page_size
+        # optional MetricsRegistry (duck-typed — still no jax here): the
+        # scheduler passes its registry so allocator pressure events
+        # (pool.evictions / pool.alloc_failures) land on the same stats
+        # surface as everything else
+        self.metrics = metrics
         self.refcount = np.zeros((num_pages,), np.int32)
         self.refcount[GARBAGE_PAGE] = 1          # pinned forever
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
@@ -64,6 +69,10 @@ class PagePool:
         self._prefixes: "OrderedDict[tuple, PrefixEntry]" = OrderedDict()
 
     # -- allocation -------------------------------------------------------
+
+    def _count(self, name: str) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name).inc()
 
     def available(self) -> int:
         return len(self._free)
@@ -73,6 +82,7 @@ class PagePool:
         is short — the caller decides whether to evict prefixes or
         defer admission."""
         if n > len(self._free):
+            self._count("pool.alloc_failures")
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
@@ -142,6 +152,7 @@ class PagePool:
         _, entry = self._prefixes.popitem(last=False)
         for p in entry.pages:
             self.free(p)
+        self._count("pool.evictions")
         return True
 
     def prefix_entries(self) -> int:

@@ -61,11 +61,27 @@ lane (or drops a pending request) releasing its pages, and an optional
 allocation, admission, and step boundaries so tests can force every
 degraded path deterministically.  A no-progress watchdog turns a
 host/device desync into a diagnostic error instead of a silent spin.
+
+Telemetry (PR 9): the scheduler always owns a
+:class:`~repro.runtime.telemetry.MetricsRegistry` — every counter/timer
+the earlier PRs exposed ad hoc (``prefill_s``, ``paged_stats()``,
+``lifecycle_stats()``) is now a view over it, plus TTFT / inter-token /
+queue-time / end-to-end latency histograms recorded at each request's
+lifecycle transitions.  Passing ``telemetry=Telemetry(...)`` also turns
+on the Chrome-trace recorder: per-request lifecycle rows (submit →
+admit → prefix hit/miss → first token → per-tick progress →
+preempt/requeue → finish) and scheduler tick spans (admission,
+prepare_writes, step dispatch, retirement fetch), exported with
+``telemetry.export_chrome_trace(path)`` and viewable in Perfetto.  All
+instrumentation is host-clock only and measures *dispatch*, not device
+completion (the zero-host-syncs-per-token invariant survives tracing);
+see ``runtime/telemetry.py`` for the exact timestamp semantics.
 """
 from __future__ import annotations
 
 import time
 from collections import deque, namedtuple
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Deque, Dict, List, Optional
@@ -78,6 +94,7 @@ from repro import models
 from repro.configs.base import ArchConfig
 from repro.runtime.faults import FaultInjector
 from repro.runtime.pagepool import GARBAGE_PAGE, PagePool
+from repro.runtime.telemetry import (PID_SCHED, MetricsRegistry, Telemetry)
 
 FreeCapacity = namedtuple("FreeCapacity", ["lanes", "pages"])
 
@@ -99,6 +116,15 @@ class Request:
     stop_tokens: Optional[List[int]] = None
     deadline_s: Optional[float] = None
     finish_reason: Optional[str] = None
+    # telemetry: when the admission dispatch that sampled this request's
+    # first token returned (host clock — dispatch-anchored, see
+    # runtime/telemetry.py for exact semantics); survives preemption so
+    # TTFT is recorded once.  ``diagnostics`` is attached on cancel /
+    # timeout retirement: a scheduler-state snapshot (lane ages, free
+    # pages, last-tick duration) that turns "why did this die?" into a
+    # diagnosis.
+    first_token_at: float = 0.0
+    diagnostics: Optional[Dict[str, Any]] = None
 
 
 def _sample(key, logits, temp):
@@ -132,10 +158,23 @@ class ContinuousBatchingScheduler:
                  max_stop_tokens: int = 4,
                  eos_check_interval: int = 8,
                  watchdog_ticks: int = 256,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
+        # telemetry: None keeps the tracer off (zero trace events, and
+        # the transfer-guard tests prove zero extra device traffic
+        # either way); the MetricsRegistry ALWAYS exists — it is the one
+        # stats surface behind prefill_s/decode_s, paged_stats() and
+        # lifecycle_stats(), whose legacy attributes are now properties
+        # over registry counters (see _METRIC_ATTRS below).
+        self.telemetry = telemetry
+        self.metrics = telemetry.metrics if telemetry is not None \
+            else MetricsRegistry()
+        if telemetry is not None:
+            telemetry.tracer.ensure_thread(PID_SCHED, 0, "ticks")
+        self._last_tick_s = 0.0
         self.max_slots = max_slots
         self.cache_len = cache_len
         self.max_new_cap = max_new_cap
@@ -195,7 +234,8 @@ class ContinuousBatchingScheduler:
                 raise ValueError(
                     f"num_pages={self.num_pages} cannot hold even one "
                     f"lane ({self.pages_per_lane} pages + garbage page)")
-            self.pool = PagePool(self.num_pages, page_size)
+            self.pool = PagePool(self.num_pages, page_size,
+                                 metrics=self.metrics)
             # host mirrors of the device page table / lane positions —
             # kept in lockstep so allocation decisions need no device
             # reads (the zero-syncs-per-token property survives paging)
@@ -225,16 +265,12 @@ class ContinuousBatchingScheduler:
         self.pending: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self._steps_left = np.zeros(max_slots, np.int64)
-        self.host_syncs = 0           # device->host transfers (per retire)
-        self.tokens_generated = 0
-        self.prefill_s = 0.0
-        self.decode_s = 0.0
-        # paged-serving counters (stay zero for the ring layout)
-        self.admissions = 0
-        self.prefix_hits = 0
-        self.prefill_tokens_total = 0
-        self.prefill_tokens_saved = 0
-        self.cow_copies = 0
+        # host_syncs / tokens_generated / prefill_s / decode_s and the
+        # paged counters (admissions, prefix_hits, cow_copies, ...) are
+        # registry-backed properties (see _METRIC_ATTRS at module end):
+        # they read as 0 on a fresh registry and are deliberately NOT
+        # zeroed here so a shared Telemetry keeps its totals across
+        # ServingEngine scheduler rebuilds.
         # -- request-lifecycle state ------------------------------------
         self.eos_id = eos_id
         if max_stop_tokens < 1:
@@ -243,13 +279,11 @@ class ContinuousBatchingScheduler:
         self.eos_check_interval = max(1, eos_check_interval)
         self.watchdog_ticks = watchdog_ticks
         self.faults = faults
-        self.preemptions = 0
-        self.eos_finishes = 0
-        self.eos_steps_saved = 0
-        self.deadline_misses = 0
-        self.cancellations = 0
-        self.mask_syncs = 0           # periodic done-mask fetches (EOS)
-        self.finish_reasons: Dict[str, int] = {}
+        if faults is not None and telemetry is not None \
+                and getattr(faults, "telemetry", None) is None:
+            faults.telemetry = telemetry       # injected faults leave traces
+        # lifecycle counters (preemptions, eos_finishes, mask_syncs, ...)
+        # are registry-backed properties too — see _METRIC_ATTRS
         self._tick_no = 0
         self._stall_ticks = 0
         # uids cancelled before we could find them (still pending behind
@@ -489,6 +523,80 @@ class ContinuousBatchingScheduler:
         cache["page_table"] = cache["page_table"].at[slot, idx].set(dst)
         return {**state, "cache": cache}
 
+    # -- telemetry plumbing --------------------------------------------------
+    # Every hook below is host-only (time.perf_counter + dict appends):
+    # telemetry can never add a device->host transfer, so the
+    # zero-host-syncs-per-token invariant holds with tracing on.  What
+    # each timestamp MEANS under async dispatch is documented in
+    # runtime/telemetry.py and docs/serving.md — in short, span ends
+    # measure dispatch, and the per-token latency histograms are
+    # anchored at the real sync points (retirement fetch, done-mask
+    # fetch).
+
+    def _span(self, name: str, **args):
+        """Tracer span (no-op context when telemetry is off)."""
+        if self.telemetry is None:
+            return nullcontext()
+        return self.telemetry.tracer.span(name, args=args or None)
+
+    def _rt(self, uid: int):
+        """The request's trace row, or None when telemetry is off."""
+        return self.telemetry.request(uid) if self.telemetry is not None \
+            else None
+
+    def _record_admit(self, req: Request, slot: int, plen: int,
+                      t_pop: float) -> None:
+        """Queue-time + TTFT bookkeeping once a request holds a lane.
+        TTFT is submit -> admission-dispatch-return (the first token is
+        sampled inside the dispatched prefill program); recorded only on
+        the FIRST admission so preempt/re-admit cycles don't re-count."""
+        now = time.perf_counter()
+        queue_s = t_pop - req.submitted_at
+        self.metrics.histogram("req.queue_s").record(queue_s)
+        rt = self._rt(req.uid)
+        if rt is not None:
+            rt.admitted(slot, plen, queue_s)
+        if req.first_token_at == 0.0:
+            req.first_token_at = now
+            ttft = now - req.submitted_at
+            self.metrics.histogram("req.ttft_s").record(ttft)
+            if rt is not None:
+                rt.first_token(ttft)
+
+    def _record_finish(self, req: Request) -> None:
+        """End-to-end + amortized inter-token latency at the retirement
+        fetch — the one real sync point, so the ITL number is anchored
+        to device completion at the far end.  One observation per
+        inter-token gap (requests weight the histogram by length)."""
+        self.metrics.counter(
+            "sched.finish." + (req.finish_reason or "unknown")).inc()
+        self.metrics.histogram("req.e2e_s").record(
+            req.finished_at - req.submitted_at)
+        ntot = len(req.output)
+        if ntot > 1 and req.first_token_at > 0.0:
+            self.metrics.histogram("req.itl_s").record(
+                (req.finished_at - req.first_token_at) / (ntot - 1),
+                ntot - 1)
+        rt = self._rt(req.uid)
+        if rt is not None:
+            rt.finished(req.finish_reason or "unknown", ntot)
+
+    def telemetry_snapshot(self) -> Dict[str, Any]:
+        """Cheap host-state snapshot for diagnostics: live-lane ages,
+        free capacity, last-tick duration.  Attached to cancel/timeout
+        retirements (``Request.diagnostics``) and to the no-progress
+        watchdog error."""
+        now = time.perf_counter()
+        return {
+            "tick": self._tick_no,
+            "last_tick_ms": round(self._last_tick_s * 1e3, 3),
+            "lane_ages_s": {r.uid: round(now - r.submitted_at, 3)
+                            for r in self.slots if r is not None},
+            "pending_uids": [r.uid for r in self.pending],
+            "free_lanes": sum(r is None for r in self.slots),
+            "free_pages": self.pool.available() if self._paged else None,
+        }
+
     # -- host-side page bookkeeping ------------------------------------------
 
     def _alloc_pages(self, n: int, *, site: str = "",
@@ -499,6 +607,7 @@ class ContinuousBatchingScheduler:
         hard exhaustion (no eviction rescue) deterministically."""
         if self.faults is not None and self.faults.on_alloc(
                 site, tick=self._tick_no, slot=slot, n=n):
+            self.metrics.counter("faults.alloc_failures").inc()
             return None
         pages = self.pool.alloc(n)
         while pages is None and self.pool.evict_one():
@@ -613,6 +722,9 @@ class ContinuousBatchingScheduler:
             self._release_lane_pages(slot)
         self.pending.appendleft(req)
         self.preemptions += 1
+        rt = self._rt(req.uid)
+        if rt is not None:
+            rt.preempted(n)
 
     def _release_lane_pages(self, slot: int) -> None:
         """Drop the lane's reference on every page in its table row and
@@ -687,6 +799,9 @@ class ContinuousBatchingScheduler:
                 f"max_new_tokens ({request.max_new_tokens}) would wrap "
                 f"the ring cache (cache_len={self.cache_len}) mid-decode "
                 "and corrupt the prompt prefix; shrink one of them")
+        rt = self._rt(request.uid)
+        if rt is not None:
+            rt.submitted(len(request.prompt), request.max_new_tokens)
         self.pending.append(request)
 
     def _stop_set(self, req: Request) -> frozenset:
@@ -726,6 +841,7 @@ class ContinuousBatchingScheduler:
             while not defer and self.pending \
                     and self.slots[slot] is None:
                 req = self.pending.popleft()
+                t_pop = time.perf_counter()
                 # drop requests cancelled or expired while queued —
                 # before any device work or page refs
                 if req.uid in self._cancel_requested:
@@ -745,26 +861,34 @@ class ContinuousBatchingScheduler:
                 plen = self._bucket(len(req.prompt))
                 toks = np.full((1, plen), self.pad_id, np.int32)
                 toks[0, plen - len(req.prompt):] = req.prompt  # left-pad
-                if self._paged:
-                    verdict = self._admit_paged_host(req, slot, toks, plen)
-                    if verdict == "dropped":
-                        continue               # cancelled mid-admission
-                    if verdict == "defer":
-                        # pool pressure: requeue and stop admitting —
-                        # running lanes retire and release pages
-                        self.pending.appendleft(req)
-                        defer = True
-                        break
-                else:
-                    self.state = self._admit_fn(
-                        self.params, self.state, jnp.asarray(toks),
-                        jnp.int32(slot), jnp.float32(req.temperature),
-                        jnp.int32(req.max_new_tokens),
-                        self._stop_row(req), plen=plen)
+                with self._span("admit", uid=req.uid, slot=slot,
+                                plen=plen):
+                    if self._paged:
+                        verdict = self._admit_paged_host(req, slot, toks,
+                                                         plen)
+                    else:
+                        verdict = "ok"
+                        self.state = self._admit_fn(
+                            self.params, self.state, jnp.asarray(toks),
+                            jnp.int32(slot), jnp.float32(req.temperature),
+                            jnp.int32(req.max_new_tokens),
+                            self._stop_row(req), plen=plen)
+                if verdict == "dropped":
+                    continue                   # cancelled mid-admission
+                if verdict == "defer":
+                    # pool pressure: requeue and stop admitting —
+                    # running lanes retire and release pages
+                    if self.telemetry is not None:
+                        self.telemetry.tracer.instant(
+                            "admit_defer", args={"uid": req.uid})
+                    self.pending.appendleft(req)
+                    defer = True
+                    break
                 self.slots[slot] = req
                 self._set_stop_host(slot, req)
                 # the sampled-at-prefill first token is output token #1
                 self._steps_left[slot] = req.max_new_tokens - 1
+                self._record_admit(req, slot, plen, t_pop)
                 admitted = True
                 break
         if admitted:
@@ -799,6 +923,9 @@ class ContinuousBatchingScheduler:
             shared = list(entry.pages[:span])
             self.prefix_hits += 1
             self.prefill_tokens_saved += t
+            rt = self._rt(req.uid)
+            if rt is not None:
+                rt.prefix_lookup(True, t)
             for p in shared:
                 self.pool.ref(p)
             self._pt_host[slot] = 0
@@ -810,25 +937,28 @@ class ContinuousBatchingScheduler:
             # suffix prefill: one batched step per remaining prompt token
             logits = None
             aborted = None
-            for i in range(t, plen):
-                if self.faults is not None:
-                    self.faults.on_suffix_step(req, slot, i,
-                                               tick=self._tick_no,
-                                               scheduler=self)
-                if req.uid in self._cancel_requested:
-                    self._cancel_requested.discard(req.uid)
-                    aborted = "dropped"
-                    break
-                self._prepare_writes(extra=slot)
-                while not self._ensure_writable(slot, i, site="suffix:"):
-                    if self._preempt_lowest(protect=slot) is None:
-                        aborted = "defer"
+            with self._span("suffix_prefill", uid=req.uid,
+                            tokens=plen - t):
+                for i in range(t, plen):
+                    if self.faults is not None:
+                        self.faults.on_suffix_step(req, slot, i,
+                                                   tick=self._tick_no,
+                                                   scheduler=self)
+                    if req.uid in self._cancel_requested:
+                        self._cancel_requested.discard(req.uid)
+                        aborted = "dropped"
                         break
-                if aborted:
-                    break
-                logits, self.state = self._suffix_step_fn(
-                    self.params, self.state, jnp.int32(toks[0, i]),
-                    jnp.int32(slot), jnp.int32(i))
+                    self._prepare_writes(extra=slot)
+                    while not self._ensure_writable(slot, i,
+                                                    site="suffix:"):
+                        if self._preempt_lowest(protect=slot) is None:
+                            aborted = "defer"
+                            break
+                    if aborted:
+                        break
+                    logits, self.state = self._suffix_step_fn(
+                        self.params, self.state, jnp.int32(toks[0, i]),
+                        jnp.int32(slot), jnp.int32(i))
             if aborted:
                 # unwind: drop every ref this lane holds (shared pages
                 # it mapped AND pages the suffix loop allocated/COW'd)
@@ -847,6 +977,9 @@ class ContinuousBatchingScheduler:
                 jnp.int32(req.max_new_tokens), jnp.int32(plen),
                 self._stop_row(req))
         else:
+            rt = self._rt(req.uid)
+            if rt is not None:
+                rt.prefix_lookup(False, 0)
             pages = self._alloc_pages(npages, site="admission", slot=slot)
             if pages is None:
                 self.admissions -= 1
@@ -880,8 +1013,11 @@ class ContinuousBatchingScheduler:
         if _prefetched is not None:
             row, n = _prefetched
         else:
-            row, n = jax.device_get((self.state["out_buf"][slot],
-                                     self.state["out_len"][slot]))
+            # the fetch is where async dispatch settles — this span's
+            # duration is real device catch-up time, not dispatch cost
+            with self._span("retire_fetch", uid=req.uid, slot=slot):
+                row, n = jax.device_get((self.state["out_buf"][slot],
+                                         self.state["out_len"][slot]))
             self.host_syncs += 1
         n = int(n)
         produced = [int(t) for t in row[:n]]
@@ -907,7 +1043,11 @@ class ContinuousBatchingScheduler:
         req.finish_reason = reason
         req.done = True
         req.finished_at = time.perf_counter()
-        self.finish_reasons[reason] = self.finish_reasons.get(reason, 0) + 1
+        if reason in ("cancelled", "timeout"):
+            # attach the why-did-this-die snapshot before the lane state
+            # is torn down (satellite: "stuck" becomes a diagnosis)
+            req.diagnostics = self.telemetry_snapshot()
+        self._record_finish(req)
         self.slots[slot] = None
         self._steps_left[slot] = 0
         self._set_stop_host(slot, None)
@@ -926,7 +1066,8 @@ class ContinuousBatchingScheduler:
         req.finish_reason = reason
         req.done = True
         req.finished_at = time.perf_counter()
-        self.finish_reasons[reason] = self.finish_reasons.get(reason, 0) + 1
+        req.diagnostics = self.telemetry_snapshot()
+        self._record_finish(req)
         if reason == "cancelled":
             self.cancellations += 1
         elif reason == "timeout":
@@ -980,6 +1121,11 @@ class ContinuousBatchingScheduler:
             return
         alive = np.asarray(self.state["active"])
         self.mask_syncs += 1
+        if self.telemetry is not None:
+            # this fetch is a real sync point — mark it so trace readers
+            # know where device completion is anchored
+            self.telemetry.tracer.instant(
+                "eos_mask_fetch", args={"tick": self._tick_no})
         for slot, req in enumerate(self.slots):
             if req is not None and self._steps_left[slot] > 0 \
                     and self._has_stops[slot] and not alive[slot]:
@@ -993,6 +1139,9 @@ class ContinuousBatchingScheduler:
         fetch is where JAX's async dispatch settles, so excluding it
         would credit the scheduler with near-zero decode time."""
         self._tick_no += 1
+        t_tick0 = time.perf_counter()
+        tr = self.telemetry.tracer if self.telemetry is not None else None
+        tick_ts0 = tr.now_us() if tr is not None else 0.0
         # progress snapshot for the no-progress watchdog
         marker = (self.host_syncs, self.preemptions, self.cancellations,
                   self.deadline_misses, len(self.pending))
@@ -1008,21 +1157,33 @@ class ContinuousBatchingScheduler:
                 # every writing lane must own its target page before the
                 # step lands (first-touch allocation / copy-on-write) —
                 # this can preempt lanes, so re-check below
-                self._prepare_writes()
+                with self._span("prepare_writes"):
+                    self._prepare_writes()
         if any(self._steps_left[s] > 0 for s, r in enumerate(self.slots)
                if r is not None):
-            self.state = self._step_fn(self.params, self.state)
+            # span/histogram measure ENQUEUE cost: the jitted step is
+            # dispatched asynchronously, the device may still be running
+            with self._span("step_dispatch"):
+                ts0 = time.perf_counter()
+                self.state = self._step_fn(self.params, self.state)
+                self.metrics.histogram("sched.step_dispatch_s").record(
+                    time.perf_counter() - ts0)
             for slot, req in enumerate(self.slots):
                 if req is not None and self._steps_left[slot] > 0:
                     self._steps_left[slot] -= 1
                     if self._paged:
                         self._host_pos[slot] += 1
+                    rt = self._rt(req.uid)
+                    if rt is not None:
+                        rt.progressed(req.max_new_tokens
+                                      - int(self._steps_left[slot]))
             worked = True
         if worked and self._tick_no % self.eos_check_interval == 0:
             self._reconcile_eos()
         syncs = self.host_syncs
         self._retire_finished()
-        if worked or self.host_syncs > syncs:
+        retired = self.host_syncs > syncs
+        if worked or retired:
             self.decode_s += time.perf_counter() - t0
         busy = bool(self.pending) or any(r is not None for r in self.slots)
         progressed = admitted or worked or marker != (
@@ -1034,6 +1195,21 @@ class ContinuousBatchingScheduler:
                 self._raise_stalled()
         else:
             self._stall_ticks = 0
+        self._last_tick_s = time.perf_counter() - t_tick0
+        if admitted or worked or retired:
+            self.metrics.histogram("sched.tick_s").record(self._last_tick_s)
+        self.metrics.gauge("sched.live_lanes").set(
+            sum(r is not None for r in self.slots))
+        if self._paged:
+            self.metrics.gauge("pool.free_pages").set(self.pool.available())
+        if tr is not None and (admitted or worked or retired):
+            tr.complete("tick", tick_ts0, tr.now_us() - tick_ts0,
+                        args={"tick": self._tick_no, "admitted": admitted,
+                              "worked": worked, "retired": retired,
+                              "pending": len(self.pending)})
+            if self._paged:
+                tr.counter_event("free_pages",
+                                 {"free": self.pool.available()})
         return busy
 
     def _raise_stalled(self) -> None:
@@ -1041,13 +1217,15 @@ class ContinuousBatchingScheduler:
                  f"{int(self._steps_left[s])}"
                  + (f" pos={int(self._host_pos[s])}" if self._paged else "")
                  for s, r in enumerate(self.slots) if r is not None]
-        free = self.pool.available() if self._paged else None
+        snap = self.telemetry_snapshot()
         raise RuntimeError(
             f"scheduler made no progress for {self._stall_ticks} "
             f"consecutive ticks (tick {self._tick_no}): no admission, "
             f"no decode step, no retirement.  Live lanes: "
-            f"{lanes or 'none'}; pending uids: "
-            f"{[r.uid for r in self.pending]}; free pages: {free}.  "
+            f"{lanes or 'none'}; lane ages (s): {snap['lane_ages_s']}; "
+            f"pending uids: {snap['pending_uids']}; free pages: "
+            f"{snap['free_pages']}; last tick took "
+            f"{snap['last_tick_ms']}ms.  "
             "This usually means host bookkeeping desynced from device "
             "state, or the pool cannot fit any pending request "
             f"(num_pages={getattr(self, 'num_pages', None)}).")
@@ -1100,6 +1278,7 @@ class ContinuousBatchingScheduler:
                 if self.prefill_tokens_total else 0.0),
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
+            "lru_evictions": self.metrics.counter("pool.evictions").value,
             "kv_bytes_resident": self.kv_bytes_resident(),
             "free_pages": (self.pool.available() if self._paged else None),
             "prefix_entries": (self.pool.prefix_entries()
@@ -1144,3 +1323,49 @@ class ContinuousBatchingScheduler:
             raise AssertionError(
                 f"refcount leak: pages {bad.tolist()} expected "
                 f"{expected[bad].tolist()} got {actual[bad].tolist()}")
+
+
+# -- metric-backed attributes (the single stats surface) ---------------------
+# The ad-hoc counters of PRs 1-8 (prefill_s/decode_s timers, paged and
+# lifecycle tallies) now LIVE in the MetricsRegistry; the attribute names
+# every test/bench/engine already uses are preserved as read-write
+# properties over the registry cells, so `sched.preemptions += 1`,
+# `sched.prefill_s = 0.0` (bench warmup resets) and
+# `metrics.snapshot()["sched.preemptions"]` all see one number.
+
+_METRIC_ATTRS = {
+    "host_syncs": "sched.host_syncs",
+    "tokens_generated": "sched.tokens_generated",
+    "prefill_s": "sched.prefill_s",
+    "decode_s": "sched.decode_s",
+    "admissions": "sched.admissions",
+    "prefix_hits": "sched.prefix_hits",
+    "prefill_tokens_total": "sched.prefill_tokens_total",
+    "prefill_tokens_saved": "sched.prefill_tokens_saved",
+    "cow_copies": "sched.cow_copies",
+    "preemptions": "sched.preemptions",
+    "eos_finishes": "sched.eos_finishes",
+    "eos_steps_saved": "sched.eos_steps_saved",
+    "deadline_misses": "sched.deadline_misses",
+    "cancellations": "sched.cancellations",
+    "mask_syncs": "sched.mask_syncs",
+}
+
+
+def _metric_attr(metric: str) -> property:
+    def fget(self):
+        return self.metrics.counter(metric).value
+
+    def fset(self, v):
+        self.metrics.counter(metric).value = v
+
+    return property(fget, fset, doc=f"registry counter {metric!r}")
+
+
+for _attr, _metric in _METRIC_ATTRS.items():
+    setattr(ContinuousBatchingScheduler, _attr, _metric_attr(_metric))
+
+ContinuousBatchingScheduler.finish_reasons = property(
+    lambda self: self.metrics.counters_with_prefix("sched.finish."),
+    doc="finish-reason tallies, reconstructed from the "
+        "'sched.finish.<reason>' registry counters")

@@ -73,7 +73,7 @@ class ServingEngine:
                  max_stop_tokens: int = 4,
                  eos_check_interval: int = 8,
                  watchdog_ticks: int = 256,
-                 faults=None):
+                 faults=None, telemetry=None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -98,6 +98,9 @@ class ServingEngine:
         self.eos_check_interval = eos_check_interval
         self.watchdog_ticks = watchdog_ticks
         self.faults = faults
+        # optional Telemetry bundle (runtime.telemetry): shared across
+        # scheduler rebuilds so metrics/trace survive max_new_cap growth
+        self.telemetry = telemetry
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -142,7 +145,7 @@ class ServingEngine:
                 max_stop_tokens=self.max_stop_tokens,
                 eos_check_interval=self.eos_check_interval,
                 watchdog_ticks=self.watchdog_ticks,
-                faults=self.faults)
+                faults=self.faults, telemetry=self.telemetry)
             self._sched.pending.extend(pending)
         return self._sched
 

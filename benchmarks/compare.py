@@ -1,0 +1,246 @@
+"""CI perf-regression gate: fresh ``BENCH_serving.json`` vs the
+committed ``benchmarks/baseline.json``.
+
+The gate only *hard-fails* on machine-independent metrics — analytic
+bytes/token from the roofline accountant, KV compression ratios, prefix
+cache hit rates, goodput on loose SLO budgets — because those are
+decided by the code, not by how loaded the CI host happens to be.
+Throughput-flavoured numbers (tok/s, MBU achieved, latency) are carried
+in the same table as report-only rows so the trajectory stays visible
+across PRs without flaking the build.
+
+    python -m benchmarks.compare                       # gate (exit 1 on
+                                                       # regression)
+    python -m benchmarks.compare --update-baseline     # re-seed baseline
+    python -m benchmarks.compare --self-test           # prove the gate
+                                                       # catches an
+                                                       # injected
+                                                       # regression
+
+Stdlib-only on purpose: the gate must run even when the repro package
+(or jax) cannot import, so a broken build still produces a readable
+failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+DEF_FRESH = "BENCH_serving.json"
+DEF_BASELINE = "benchmarks/baseline.json"
+
+# (dotted path into the bench payload, direction, rel tolerance, gated?)
+# direction: "higher" = bigger is better, "lower" = smaller is better.
+# tolerance: allowed relative move in the BAD direction before the gate
+# trips (gated rows) or before the row is flagged (report rows).
+SPECS: List[Tuple[str, str, float, bool]] = [
+    # machine-independent — gated strictly
+    ("kv_bytes_ratio_bf16_over_int8",                 "higher", 0.01, True),
+    ("kv_bytes_per_token.bf16",                       "lower",  0.01, True),
+    ("kv_bytes_per_token.int8",                       "lower",  0.01, True),
+    ("telemetry.kv_read_bytes_ratio_bf16_over_int8",  "higher", 0.01, True),
+    ("telemetry.mbu.bf16.bytes_per_token",            "lower",  0.02, True),
+    ("telemetry.mbu.int8.bytes_per_token",            "lower",  0.02, True),
+    ("telemetry.mbu.bf16.flops_per_token",            "lower",  0.02, True),
+    ("telemetry.goodput.bf16.goodput",                "higher", 0.0,  True),
+    ("telemetry.goodput.int8.goodput",                "higher", 0.0,  True),
+    ("paged.prefix_hit_rate",                         "higher", 0.0,  True),
+    ("paged.prefill_tokens_saved_frac",               "higher", 0.05, True),
+    ("paged.residency_ratio_ring_over_paged",         "higher", 0.10, True),
+    # machine-dependent — report-only trajectory rows
+    ("per_token_latency_ms_b1",                       "lower",  0.50, False),
+    ("tokens_per_s.batched_b4",                       "higher", 0.50, False),
+    ("tokens_per_s.midflight",                        "higher", 0.50, False),
+    ("telemetry.mbu.bf16.mbu",                        "higher", 0.50, False),
+    ("telemetry.mbu.int8.mbu",                        "higher", 0.50, False),
+    ("telemetry.mbu.int8.achieved_tok_per_s",         "higher", 0.50, False),
+]
+
+
+def _dig(doc: Dict[str, Any], path: str) -> Optional[float]:
+    cur: Any = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    if isinstance(cur, bool):
+        return float(cur)
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+def _delta_bad(base: float, cur: float, direction: str) -> float:
+    """Relative movement in the bad direction (positive = worse)."""
+    if base == 0.0:
+        return 0.0 if cur == base else (1.0 if (
+            (direction == "higher") == (cur < base)) else -1.0)
+    rel = (cur - base) / abs(base)
+    return -rel if direction == "higher" else rel
+
+
+def compare(fresh: Dict[str, Any], baseline: Dict[str, Any]
+            ) -> Tuple[List[Dict[str, Any]], int]:
+    """Evaluate every spec; returns (table rows, count of gate trips)."""
+    base_metrics = baseline.get("metrics", {})
+    rows, trips = [], 0
+    for path, direction, tol, gated in SPECS:
+        cur = _dig(fresh, path)
+        base = base_metrics.get(path)
+        if cur is None:
+            status = "MISSING" if gated else "absent"
+            if gated:
+                trips += 1
+            rows.append({"metric": path, "baseline": base, "current": None,
+                         "delta_bad": None, "tol": tol, "gated": gated,
+                         "status": status})
+            continue
+        if base is None:
+            rows.append({"metric": path, "baseline": None, "current": cur,
+                         "delta_bad": None, "tol": tol, "gated": gated,
+                         "status": "new"})
+            continue
+        bad = _delta_bad(float(base), cur, direction)
+        regressed = bad > tol
+        if gated and regressed:
+            trips += 1
+            status = "REGRESSED"
+        elif regressed:
+            status = "slower"      # report-only: visible, not fatal
+        else:
+            status = "ok" if bad >= 0 else "improved"
+        rows.append({"metric": path, "baseline": float(base), "current": cur,
+                     "delta_bad": bad, "tol": tol, "gated": gated,
+                     "status": status})
+    return rows, trips
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render(rows: List[Dict[str, Any]]) -> str:
+    head = ("metric", "baseline", "current", "worse%", "tol%", "gate",
+            "status")
+    table = [head]
+    for r in rows:
+        worse = "-" if r["delta_bad"] is None \
+            else f"{r['delta_bad'] * 100:+.1f}"
+        table.append((r["metric"], _fmt(r["baseline"]), _fmt(r["current"]),
+                      worse, f"{r['tol'] * 100:.0f}",
+                      "gated" if r["gated"] else "info", r["status"]))
+    widths = [max(len(row[i]) for row in table) for i in range(len(head))]
+    lines = []
+    for i, row in enumerate(table):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def seed_baseline(fresh: Dict[str, Any]) -> Dict[str, Any]:
+    metrics = {}
+    for path, _, _, _ in SPECS:
+        v = _dig(fresh, path)
+        if v is not None:
+            metrics[path] = v
+    return {
+        "benchmark": fresh.get("benchmark", "serving"),
+        "config": fresh.get("config"),
+        "smoke": fresh.get("smoke"),
+        "note": "perf-gate baseline; regenerate with "
+                "`python -m benchmarks.compare --update-baseline` "
+                "after an intentional perf change",
+        "metrics": metrics,
+    }
+
+
+def self_test(baseline: Dict[str, Any]) -> int:
+    """Prove the gate logic trips: rebuild a synthetic fresh payload from
+    the baseline, then degrade one gated metric past its tolerance and
+    require a non-zero verdict (and a zero verdict on the clean copy)."""
+    def un_dig(doc, path, value):
+        cur = doc
+        parts = path.split(".")
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = value
+
+    clean: Dict[str, Any] = {}
+    for path, v in baseline.get("metrics", {}).items():
+        un_dig(clean, path, v)
+    rows, trips = compare(clean, baseline)
+    if trips != 0:
+        print(render(rows))
+        print(f"self-test FAIL: clean payload tripped the gate ({trips})")
+        return 1
+    bad = json.loads(json.dumps(clean))          # deep copy
+    # +50% analytic bytes/token = a genuine memory-traffic regression
+    target = "telemetry.mbu.bf16.bytes_per_token"
+    un_dig(bad, target, _dig(clean, target) * 1.5)
+    rows, trips = compare(bad, baseline)
+    if trips == 0:
+        print(render(rows))
+        print("self-test FAIL: injected regression passed the gate")
+        return 1
+    print(f"self-test OK: clean payload passes, injected +50% on "
+          f"{target} trips the gate ({trips} row[s])")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=DEF_FRESH,
+                    help="freshly produced bench payload (default "
+                         f"{DEF_FRESH})")
+    ap.add_argument("--baseline", default=DEF_BASELINE,
+                    help=f"committed baseline (default {DEF_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the fresh payload's tracked metrics over "
+                         "the baseline file and exit")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate catches an injected regression "
+                         "against the committed baseline")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        with open(args.baseline) as f:
+            return self_test(json.load(f))
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    if args.update_baseline:
+        doc = seed_baseline(fresh)
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[compare] wrote {len(doc['metrics'])} baseline metrics "
+              f"-> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows, trips = compare(fresh, baseline)
+    print(render(rows))
+    if bool(fresh.get("smoke")) != bool(baseline.get("smoke")):
+        # smoke and full runs use different batch/max_new shapes, so the
+        # analytic rows are legitimately different — report, don't gate
+        print(f"\n[compare] smoke={fresh.get('smoke')} run vs "
+              f"smoke={baseline.get('smoke')} baseline: shapes differ, "
+              f"gate is advisory ({trips} would-be trip[s])")
+        return 0
+    if trips:
+        print(f"\n[compare] PERF GATE FAILED: {trips} gated metric(s) "
+              f"regressed past tolerance (see REGRESSED/MISSING rows)")
+        return 1
+    print("\n[compare] perf gate clean: no gated metric regressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -550,6 +550,43 @@ def resolve_decode_backend(name: Optional[str], quantized: bool = False,
     return name
 
 
+def decode_attn_flops(a: Attrs, in_shape: Shape = (), out_shape: Shape = ()) -> int:
+    """Analytic flops of one decode-attention token: the QK and PV dots
+    are each ``valid_len x head_dim`` MACs per q-head per layer (2 flops
+    per MAC), and the ragged kernel skips blocks beyond ``valid_len`` so
+    the effective length is rounded up to the KV block it lands in and
+    clamped to the cache capacity.  Softmax/scale flops are O(valid_len)
+    and ignored.  Attrs: ``num_heads``, ``head_dim``, ``layers``,
+    ``valid_len``; optional ``block`` (KV block size) and ``capacity``
+    (ring slots / mapped page slots)."""
+    v = _effective_slots(a)
+    return 4 * a["num_heads"] * a["head_dim"] * a["layers"] * v
+
+
+def decode_kv_bytes(a: Attrs, elem: int = 0) -> int:
+    """Analytic HBM bytes one decode token streams from the KV cache —
+    the op's "weights" in the decode roofline sense: ``per_slot_bytes``
+    (sum over K/V/scale buffers of bytes per (lane, ring-slot), all
+    layers) times the block-rounded valid length, plus ``fixed_bytes``
+    for state read regardless of position (cross-attention K/V,
+    recurrence state, page-table row).  ``elem`` is unused (the buffer
+    dtypes are already folded into ``per_slot_bytes``)."""
+    return a["per_slot_bytes"] * _effective_slots(a) + a.get("fixed_bytes", 0)
+
+
+def _effective_slots(a: Attrs) -> int:
+    """Block-rounded, capacity-clamped number of KV slots a decode step
+    with ``valid_len`` tokens of context actually touches."""
+    v = int(a["valid_len"])
+    block = int(a.get("block", 1))
+    if block > 1:
+        v = -(-v // block) * block
+    cap = a.get("capacity")
+    if cap is not None:
+        v = min(v, int(cap))
+    return v
+
+
 REGISTRY.register(OpSpec(
     kind="decode_attention",
     shape=lambda a, s: s,
@@ -560,4 +597,6 @@ REGISTRY.register(OpSpec(
               "paged": _decode_attn_paged_b,
               "paged_ref_q8": _decode_attn_paged_ref_q8_b,
               "paged_q8": _decode_attn_paged_q8_b},
+    flops=lambda a, i, o: decode_attn_flops(a, i, o),
+    weight_bytes=lambda a, e: decode_kv_bytes(a, e),
 ))

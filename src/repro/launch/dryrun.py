@@ -31,12 +31,10 @@ from repro.models import common as cm
 from repro.optim.adamw import AdamW, cosine_schedule
 from repro.sharding_hints import axis_rules
 
-# TPU v5e hardware constants (per chip)
-HW = {
-    "peak_flops": 197e12,     # bf16 FLOP/s
-    "hbm_bw": 819e9,          # B/s
-    "ici_bw": 50e9,           # B/s per link
-}
+# TPU v5e hardware constants (per chip) — shared with the serving
+# roofline accountant so dryrun estimates and live MBU/MFU gauges are
+# anchored to the same peaks.
+HW = hlo_costs.HW_PEAKS["tpu"]
 
 ARCHS = [
     "rwkv6-3b", "whisper-medium", "qwen3-8b", "chameleon-34b",

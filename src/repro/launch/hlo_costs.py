@@ -40,6 +40,39 @@ _DTYPE_BYTES = {
     "u1": 1, "s1": 1, "s2": 1, "u2": 1,
 }
 
+# Hardware peak table shared by the dryrun estimator and the serving
+# roofline accountant (runtime/roofline.py).  Values are per chip/host.
+# The TPU row is v5e; the CPU row is a deliberately modest dev-box figure
+# so CPU-smoke MBU numbers are indicative, not comparable across machines
+# (override via REPRO_HW_PEAK_FLOPS / REPRO_HW_HBM_BW / REPRO_HW_ICI_BW).
+HW_PEAKS = {
+    "tpu": {"name": "tpu-v5e", "peak_flops": 197e12, "hbm_bw": 819e9,
+            "ici_bw": 50e9},
+    "gpu": {"name": "gpu-generic", "peak_flops": 60e12, "hbm_bw": 1.0e12,
+            "ici_bw": 25e9},
+    "cpu": {"name": "cpu-host", "peak_flops": 2.0e11, "hbm_bw": 5.0e10,
+            "ici_bw": 1e9},
+}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float = 0.0,
+                   hw: Optional[Dict[str, float]] = None) -> Dict[str, object]:
+    """Classic roofline decomposition: time lower bounds per resource and
+    the binding one.  ``hw`` is a row of :data:`HW_PEAKS` (default TPU);
+    the same terms drive ``dryrun`` estimates and the live serving
+    accountant, so "achieved vs roofline" means one thing repo-wide."""
+    hw = hw or HW_PEAKS["tpu"]
+    compute_s = flops / hw["peak_flops"]
+    memory_s = hbm_bytes / hw["hbm_bw"]
+    collective_s = wire_bytes / hw["ici_bw"] if wire_bytes else 0.0
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=lambda k: terms[k])
+    terms["bound_s"] = terms[bottleneck]
+    terms["bottleneck"] = bottleneck.replace("_s", "")
+    return terms
+
+
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-~]+)\s*\(.*\)\s*->")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-~]+)\s*=\s*(.*)$")

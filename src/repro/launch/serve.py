@@ -10,6 +10,19 @@ continuous-batching generation, with hot switching between models.
 Generation runs on the slot-based scheduler (device-side sampling,
 zero host syncs per token); pass ``--aligned`` to drive the legacy
 aligned-batch baseline instead for comparison.
+
+Observability flags:
+
+* ``--metrics-port N`` serves live Prometheus text exposition on
+  ``http://127.0.0.1:N/metrics`` (plus ``/healthz``) for the whole run;
+  ``--metrics-hold S`` keeps the process (and the endpoint) alive S
+  extra seconds after generation so a scraper can catch the final
+  state.  Port 0 picks a free port and prints it.
+* ``--trace PATH`` records the Chrome trace.  The trace is flushed on
+  SIGINT/SIGTERM/exit too, so a killed run still yields a loadable
+  file (bounded by the tracer's ``max_events``).
+* ``--slo-ttft`` / ``--slo-itl`` set default per-request SLO budgets
+  (seconds); the goodput fraction lands in the metrics output.
 """
 from __future__ import annotations
 
@@ -23,6 +36,7 @@ from repro import models
 from repro.checkpoint.ckpt import publish_checkpoint
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.modelstore import ModelStore
+from repro.runtime.metrics_http import MetricsServer
 from repro.runtime.telemetry import Telemetry
 from repro.serving.engine import MultiModelServer, Request
 
@@ -54,10 +68,35 @@ def main():
                     help="use the legacy aligned-batch loop (baseline)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record request-lifecycle telemetry and export a "
-                         "Chrome trace_event JSON here (open in Perfetto)")
+                         "Chrome trace_event JSON here (open in Perfetto); "
+                         "flushed on SIGINT/SIGTERM/exit, not just clean "
+                         "completion")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live /metrics (Prometheus text exposition) "
+                         "and /healthz on this port; 0 picks a free port")
+    ap.add_argument("--metrics-hold", type=float, default=0.0, metavar="S",
+                    help="keep the metrics endpoint up S seconds after the "
+                         "run so an external scraper sees the final state")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S",
+                    help="default TTFT budget (seconds) for goodput")
+    ap.add_argument("--slo-itl", type=float, default=None, metavar="S",
+                    help="default inter-token-latency budget (seconds)")
     args = ap.parse_args()
     model_names = args.model or ["tinyllama-1.1b", "qwen3-0.6b"]
-    telemetry = Telemetry() if args.trace else None
+    # a Telemetry bundle exists whenever any observability surface is on;
+    # metrics-only runs keep the tracer's memory bound tiny
+    telemetry = None
+    if args.trace or args.metrics_port is not None:
+        telemetry = Telemetry()
+    if args.trace:
+        telemetry.install_flush_on_exit(args.trace)
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = MetricsServer(telemetry.metrics,
+                                       port=args.metrics_port)
+        port = metrics_server.start()
+        print(f"metrics: http://127.0.0.1:{port}/metrics "
+              f"(health: http://127.0.0.1:{port}/healthz)")
 
     store = ModelStore(args.store)
     for m in model_names:
@@ -73,7 +112,9 @@ def main():
                               max_batch=args.max_batch,
                               cache_len=args.cache_len,
                               prefill_buckets=buckets,
-                              telemetry=telemetry)
+                              telemetry=telemetry,
+                              slo_ttft_s=args.slo_ttft,
+                              slo_itl_s=args.slo_itl)
     rng = np.random.default_rng(0)
     uid = 0
     for round_i, name in enumerate(model_names * 2):   # exercise hot swap
@@ -99,12 +140,25 @@ def main():
     hits, misses = server.cache.hits, server.cache.misses
     print(f"resident-cache: {hits} hits / {misses} misses "
           f"(resident: {server.cache.resident})")
-    if telemetry is not None:
+    if telemetry is not None and args.trace:
         n = telemetry.export_chrome_trace(args.trace)
         ttft = telemetry.metrics.snapshot().get("req.ttft_s", {})
         print(f"trace: {n} events -> {args.trace} "
               f"(TTFT p50={ttft.get('p50', 0)*1e3:.1f}ms "
               f"p99={ttft.get('p99', 0)*1e3:.1f}ms)")
+    if telemetry is not None and (args.slo_ttft is not None
+                                  or args.slo_itl is not None):
+        gp = telemetry.metrics.gauge("slo.goodput").value
+        print(f"goodput: {gp:.1%} of requests met their SLO budgets")
+    if metrics_server is not None:
+        if args.metrics_hold > 0:
+            print(f"holding metrics endpoint {args.metrics_hold:.0f}s "
+                  f"(ctrl-C to stop)")
+            try:
+                time.sleep(args.metrics_hold)
+            except KeyboardInterrupt:
+                pass
+        metrics_server.stop()
 
 
 if __name__ == "__main__":

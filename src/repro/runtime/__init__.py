@@ -7,9 +7,12 @@ continuous-batching decode scheduler built on top of it.
 """
 from repro.runtime.base import CommandBuffer, DeviceRuntime
 from repro.runtime.faults import AllocFault, FaultInjector, ScriptedFaults
+from repro.runtime.metrics_http import MetricsServer
+from repro.runtime.roofline import HWSpec, RooflineAccountant
 from repro.runtime.scheduler import ContinuousBatchingScheduler
 from repro.runtime.telemetry import MetricsRegistry, Telemetry, Tracer
 
 __all__ = ["CommandBuffer", "DeviceRuntime", "ContinuousBatchingScheduler",
            "FaultInjector", "AllocFault", "ScriptedFaults",
-           "MetricsRegistry", "Telemetry", "Tracer"]
+           "MetricsRegistry", "MetricsServer", "Telemetry", "Tracer",
+           "HWSpec", "RooflineAccountant"]

@@ -79,6 +79,7 @@ see ``runtime/telemetry.py`` for the exact timestamp semantics.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque, namedtuple
 from contextlib import nullcontext
@@ -94,6 +95,7 @@ from repro import models
 from repro.configs.base import ArchConfig
 from repro.runtime.faults import FaultInjector
 from repro.runtime.pagepool import GARBAGE_PAGE, PagePool
+from repro.runtime.roofline import HWSpec, RooflineAccountant
 from repro.runtime.telemetry import (PID_SCHED, MetricsRegistry, Telemetry)
 
 FreeCapacity = namedtuple("FreeCapacity", ["lanes", "pages"])
@@ -125,6 +127,13 @@ class Request:
     # diagnosis.
     first_token_at: float = 0.0
     diagnostics: Optional[Dict[str, Any]] = None
+    # SLO budgets: per-request TTFT / inter-token-latency targets in
+    # seconds (None = inherit the scheduler-level defaults).  Attainment
+    # is judged at the retirement fetch and rolls into the registry's
+    # ``slo.*`` counters and the ``goodput`` fraction — the metric
+    # chunked prefill will be judged on (ROADMAP).
+    slo_ttft_s: Optional[float] = None
+    slo_itl_s: Optional[float] = None
 
 
 def _sample(key, logits, temp):
@@ -159,7 +168,10 @@ class ContinuousBatchingScheduler:
                  eos_check_interval: int = 8,
                  watchdog_ticks: int = 256,
                  faults: Optional[FaultInjector] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 slo_ttft_s: Optional[float] = None,
+                 slo_itl_s: Optional[float] = None,
+                 hw: Optional[HWSpec] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -295,7 +307,28 @@ class ContinuousBatchingScheduler:
         # zero-host-syncs-per-token property
         self._has_stops = np.zeros(max_slots, bool)
         self._stop_sets: List[frozenset] = [frozenset()] * max_slots
+        # SLO defaults: per-request budgets override these; None+None
+        # means no request enters the goodput denominator unless it
+        # carries its own budget
+        self.slo_ttft_s = slo_ttft_s
+        self.slo_itl_s = slo_itl_s
         self.state = self._init_state(seed)
+        # roofline accountant: analytic bytes/flops per decode token
+        # from cache/param METADATA + the host-mirrored lane positions —
+        # pure host arithmetic, so accounting adds zero device→host
+        # transfers (transfer-guard tested).  ``_host_valid`` mirrors
+        # each lane's tokens-in-cache for every layout (the paged path
+        # additionally keeps ``_host_pos`` for page allocation).
+        self._host_valid = np.zeros(max_slots, np.int64)
+        self.roofline = RooflineAccountant(
+            cfg, self.state["cache"], params, batch=max_slots,
+            paged=self._paged, page_size=page_size,
+            pages_per_lane=getattr(self, "pages_per_lane", 0), hw=hw)
+        # achieved-vs-roofline window anchor: (bytes, flops, tokens,
+        # decode_s) at the last utilization record — deltas are measured
+        # retirement-to-retirement because the retirement fetch is the
+        # scheduler's real sync point
+        self._rf_anchor = (0.0, 0.0, 0, 0.0)
         self._step_fn = jax.jit(self._step)
         self._deactivate_fn = jax.jit(self._deactivate)
         self._admit_fn = jax.jit(self._admit, static_argnames=("plen",))
@@ -552,6 +585,7 @@ class ContinuousBatchingScheduler:
         the FIRST admission so preempt/re-admit cycles don't re-count."""
         now = time.perf_counter()
         queue_s = t_pop - req.submitted_at
+        self._host_valid[slot] = plen     # roofline: tokens in cache
         self.metrics.histogram("req.queue_s").record(queue_s)
         rt = self._rt(req.uid)
         if rt is not None:
@@ -577,9 +611,49 @@ class ContinuousBatchingScheduler:
             self.metrics.histogram("req.itl_s").record(
                 (req.finished_at - req.first_token_at) / (ntot - 1),
                 ntot - 1)
+        self._record_slo(req, ntot)
         rt = self._rt(req.uid)
         if rt is not None:
             rt.finished(req.finish_reason or "unknown", ntot)
+
+    def _slo_budgets(self, req: Request) -> tuple:
+        """Effective (ttft, itl) budgets: per-request overrides, else the
+        scheduler defaults; None disables that leg."""
+        ttft = req.slo_ttft_s if req.slo_ttft_s is not None \
+            else self.slo_ttft_s
+        itl = req.slo_itl_s if req.slo_itl_s is not None else self.slo_itl_s
+        return ttft, itl
+
+    def _record_slo(self, req: Request, ntot: int) -> None:
+        """Judge SLO attainment at finish and fold it into the goodput
+        fraction.  Rules: requests with neither budget stay out of the
+        denominator entirely; user cancellations are excluded too (the
+        caller withdrew — neither met nor missed); a deadline timeout
+        counts as missed regardless of its latencies (the request did
+        not complete).  TTFT/ITL use the same dispatch/retirement
+        anchors as the ``req.*`` histograms."""
+        if req.finish_reason == "cancelled":
+            return
+        ttft_budget, itl_budget = self._slo_budgets(req)
+        if ttft_budget is None and itl_budget is None:
+            return
+        self.metrics.counter("slo.requests").inc()
+        ttft = (req.first_token_at - req.submitted_at) \
+            if req.first_token_at > 0.0 else math.inf
+        itl = ((req.finished_at - req.first_token_at) / (ntot - 1)) \
+            if ntot > 1 and req.first_token_at > 0.0 else 0.0
+        met = req.finish_reason != "timeout"
+        if ttft_budget is not None and ttft > ttft_budget:
+            self.metrics.counter("slo.ttft_violations").inc()
+            met = False
+        if itl_budget is not None and itl > itl_budget:
+            self.metrics.counter("slo.itl_violations").inc()
+            met = False
+        if met:
+            self.metrics.counter("slo.met").inc()
+        self.metrics.gauge("slo.goodput").set(
+            self.metrics.counter("slo.met").value
+            / self.metrics.counter("slo.requests").value)
 
     def telemetry_snapshot(self) -> Dict[str, Any]:
         """Cheap host-state snapshot for diagnostics: live-lane ages,
@@ -595,6 +669,12 @@ class ContinuousBatchingScheduler:
             "pending_uids": [r.uid for r in self.pending],
             "free_lanes": sum(r is None for r in self.slots),
             "free_pages": self.pool.available() if self._paged else None,
+            "pool_occupancy_frac": (
+                1.0 - self.pool.available() / self.num_pages
+                if self._paged else None),
+            "prefix_hit_ratio": (
+                self.prefix_hits / self.admissions
+                if self._paged and self.admissions else None),
         }
 
     # -- host-side page bookkeeping ------------------------------------------
@@ -716,6 +796,7 @@ class ContinuousBatchingScheduler:
         req.max_new_tokens -= n
         self.slots[slot] = None
         self._steps_left[slot] = 0
+        self._host_valid[slot] = 0
         self._set_stop_host(slot, None)
         self.state = self._deactivate_fn(self.state, jnp.int32(slot))
         if self._paged:
@@ -1050,6 +1131,7 @@ class ContinuousBatchingScheduler:
         self._record_finish(req)
         self.slots[slot] = None
         self._steps_left[slot] = 0
+        self._host_valid[slot] = 0
         self._set_stop_host(slot, None)
         if self._paged:
             self._release_lane_pages(slot)
@@ -1159,8 +1241,9 @@ class ContinuousBatchingScheduler:
                 # this can preempt lanes, so re-check below
                 with self._span("prepare_writes"):
                     self._prepare_writes()
-        if any(self._steps_left[s] > 0 for s, r in enumerate(self.slots)
-               if r is not None):
+        work = [s for s, r in enumerate(self.slots)
+                if r is not None and self._steps_left[s] > 0]
+        if work:
             # span/histogram measure ENQUEUE cost: the jitted step is
             # dispatched asynchronously, the device may still be running
             with self._span("step_dispatch"):
@@ -1168,15 +1251,24 @@ class ContinuousBatchingScheduler:
                 self.state = self._step_fn(self.params, self.state)
                 self.metrics.histogram("sched.step_dispatch_s").record(
                     time.perf_counter() - ts0)
-            for slot, req in enumerate(self.slots):
-                if req is not None and self._steps_left[slot] > 0:
-                    self._steps_left[slot] -= 1
-                    if self._paged:
-                        self._host_pos[slot] += 1
-                    rt = self._rt(req.uid)
-                    if rt is not None:
-                        rt.progressed(req.max_new_tokens
-                                      - int(self._steps_left[slot]))
+            # roofline accounting for the step just dispatched: host
+            # arithmetic over the mirrored positions (pre-advance), no
+            # device reads
+            rf_bytes, rf_flops = self.roofline.step_cost(
+                [int(self._host_valid[s]) for s in work])
+            self.metrics.counter("roofline.analytic_bytes").inc(rf_bytes)
+            self.metrics.counter("roofline.analytic_flops").inc(rf_flops)
+            self.metrics.counter("roofline.tokens").inc(len(work))
+            for slot in work:
+                req = self.slots[slot]
+                self._steps_left[slot] -= 1
+                self._host_valid[slot] += 1
+                if self._paged:
+                    self._host_pos[slot] += 1
+                rt = self._rt(req.uid)
+                if rt is not None:
+                    rt.progressed(req.max_new_tokens
+                                  - int(self._steps_left[slot]))
             worked = True
         if worked and self._tick_no % self.eos_check_interval == 0:
             self._reconcile_eos()
@@ -1185,6 +1277,11 @@ class ContinuousBatchingScheduler:
         retired = self.host_syncs > syncs
         if worked or retired:
             self.decode_s += time.perf_counter() - t0
+        if retired:
+            # the retirement fetch is where async dispatch settles —
+            # amortize achieved-vs-roofline utilization against it so
+            # MBU/MFU cost no extra sync
+            self._record_utilization()
         busy = bool(self.pending) or any(r is not None for r in self.slots)
         progressed = admitted or worked or marker != (
             self.host_syncs, self.preemptions, self.cancellations,
@@ -1202,6 +1299,11 @@ class ContinuousBatchingScheduler:
             sum(r is not None for r in self.slots))
         if self._paged:
             self.metrics.gauge("pool.free_pages").set(self.pool.available())
+            self.metrics.gauge("pool.occupancy_frac").set(
+                1.0 - self.pool.available() / self.num_pages)
+            if self.admissions:
+                self.metrics.gauge("sched.prefix_hit_ratio").set(
+                    self.prefix_hits / self.admissions)
         if tr is not None and (admitted or worked or retired):
             tr.complete("tick", tick_ts0, tr.now_us() - tick_ts0,
                         args={"tick": self._tick_no, "admitted": admitted,
@@ -1298,6 +1400,73 @@ class ContinuousBatchingScheduler:
             "mask_syncs": self.mask_syncs,
             "finish_reasons": dict(self.finish_reasons),
             "stall_ticks": self._stall_ticks,
+        }
+
+    def _record_utilization(self) -> None:
+        """Fold the accounted window since the last retirement into the
+        MBU/MFU instruments.  ``decode_s``'s far edge is the retirement
+        fetch that just completed, so 'achieved' is anchored to device
+        completion; the anchor is re-based unconditionally so a
+        registry ``reset()`` (bench warmup) self-heals next window."""
+        by = self.metrics.counter("roofline.analytic_bytes").value
+        fl = self.metrics.counter("roofline.analytic_flops").value
+        tok = self.metrics.counter("roofline.tokens").value
+        dt = self.decode_s - self._rf_anchor[3]
+        d_by, d_fl = by - self._rf_anchor[0], fl - self._rf_anchor[1]
+        d_tok = tok - self._rf_anchor[2]
+        self._rf_anchor = (by, fl, tok, self.decode_s)
+        if d_tok <= 0 or dt <= 0.0:
+            return
+        mbu, mfu = self.roofline.utilization(d_by, d_fl, dt)
+        self.metrics.histogram("roofline.mbu").record(mbu)
+        self.metrics.histogram("roofline.mfu").record(mfu)
+        self.metrics.gauge("roofline.mbu_last").set(mbu)
+        self.metrics.gauge("roofline.mfu_last").set(mfu)
+        self.metrics.gauge("roofline.bytes_per_token").set(d_by / d_tok)
+        self.metrics.gauge("roofline.flops_per_token").set(d_fl / d_tok)
+
+    def roofline_stats(self) -> Dict[str, Any]:
+        """Lifetime achieved-vs-roofline summary: analytic bytes/token
+        and flops/token for the tokens actually decoded, the bandwidth
+        ceiling they imply on this hardware, and the achieved MBU/MFU
+        over accumulated decode (dispatch + retirement-fetch) time."""
+        by = self.metrics.counter("roofline.analytic_bytes").value
+        fl = self.metrics.counter("roofline.analytic_flops").value
+        tok = self.metrics.counter("roofline.tokens").value
+        dt = self.decode_s
+        bpt = by / tok if tok else 0.0
+        mbu, mfu = self.roofline.utilization(by, fl, dt)
+        return {
+            "hw": self.roofline.describe()["hw"],
+            "tokens_accounted": tok,
+            "analytic_bytes_total": by,
+            "analytic_flops_total": fl,
+            "bytes_per_token": bpt,
+            "flops_per_token": fl / tok if tok else 0.0,
+            "kv_read_bytes_per_token_max": self.roofline.kv_read_bytes(
+                self._prefill_len),
+            "roofline_tok_per_s": self.roofline.roofline_tok_per_s(bpt),
+            "achieved_tok_per_s": tok / dt if dt > 0 else 0.0,
+            "mbu": mbu,
+            "mfu": mfu,
+            "decode_s": dt,
+        }
+
+    def slo_stats(self) -> Dict[str, Any]:
+        """SLO attainment counters and the goodput fraction (None until
+        any budgeted request finishes)."""
+        n = self.metrics.counter("slo.requests").value
+        met = self.metrics.counter("slo.met").value
+        return {
+            "slo_ttft_s": self.slo_ttft_s,
+            "slo_itl_s": self.slo_itl_s,
+            "requests": n,
+            "met": met,
+            "ttft_violations": self.metrics.counter(
+                "slo.ttft_violations").value,
+            "itl_violations": self.metrics.counter(
+                "slo.itl_violations").value,
+            "goodput": met / n if n else None,
         }
 
     def audit_pages(self) -> None:

@@ -59,14 +59,39 @@ by ``tests/test_telemetry.py``).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import math
+import re
+import signal
 import time
 from contextlib import contextmanager
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "Tracer", "RequestTrace", "Telemetry"]
+           "Tracer", "RequestTrace", "Telemetry", "prom_name"]
+
+_PROM_INVALID = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def prom_name(name: str) -> str:
+    """Sanitize a registry name into a legal Prometheus metric name:
+    ``sched.finish.eos`` → ``sched_finish_eos``; a leading digit gets a
+    ``_`` prefix."""
+    out = _PROM_INVALID.sub("_", name)
+    if out and out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _prom_value(v: Any) -> str:
+    """Prometheus float rendering (NaN/Inf are legal exposition values)."""
+    f = float(v)
+    if math.isnan(f):
+        return "NaN"
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
 
 
 class Counter:
@@ -239,6 +264,36 @@ class MetricsRegistry:
         for k, h in self._histograms.items():
             out[k] = h.snapshot()
         return out
+
+    def to_prometheus(self) -> str:
+        """Text exposition (format 0.0.4, what ``/metrics`` serves).
+
+        Counters export with the conventional ``_total`` suffix; gauges
+        as-is; histograms as Prometheus *summaries* — ``{quantile=...}``
+        sample lines straight from the log-bucketed quantile estimator
+        plus ``_sum``/``_count`` — because the log buckets don't map
+        onto fixed ``le=`` edges without lossy re-bucketing.  Names are
+        sanitized via :func:`prom_name`; empty histograms export NaN
+        quantiles (legal exposition values)."""
+        lines: List[str] = []
+        for k in sorted(self._counters):
+            n = prom_name(k) + "_total"
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {_prom_value(self._counters[k].value)}")
+        for k in sorted(self._gauges):
+            n = prom_name(k)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {_prom_value(self._gauges[k].value)}")
+        for k in sorted(self._histograms):
+            h = self._histograms[k]
+            n = prom_name(k)
+            lines.append(f"# TYPE {n} summary")
+            for q in (0.5, 0.9, 0.99):
+                lines.append(
+                    f'{n}{{quantile="{q}"}} {_prom_value(h.quantile(q))}')
+            lines.append(f"{n}_sum {_prom_value(h.total)}")
+            lines.append(f"{n}_count {h.count}")
+        return "\n".join(lines) + "\n"
 
 
 # -- Chrome trace_event export ----------------------------------------------
@@ -427,6 +482,63 @@ class Telemetry:
         """Write the Chrome trace JSON; returns the event count."""
         self.tracer.export(path)
         return len(self.tracer.events)
+
+    def install_flush_on_exit(self, path: str,
+                              signals: tuple = (signal.SIGINT,
+                                                signal.SIGTERM)
+                              ) -> Callable[[], None]:
+        """Make a killed run still yield a loadable Chrome trace.
+
+        ``Tracer.export`` normally runs only at a clean end-of-run; this
+        registers an ``atexit`` hook plus chaining handlers for the
+        given signals so an interrupt (ctrl-C, SIGTERM) flushes whatever
+        the bounded event buffer holds (``max_events`` caps the file as
+        it caps memory) before the previous handler — KeyboardInterrupt
+        included — proceeds.  The flush is idempotent per install:
+        signal + atexit won't double-write.
+
+        Returns an ``uninstall()`` callable restoring the previous
+        signal handlers (tests use it; servers never need to)."""
+        flushed = {"done": False}
+
+        def _flush() -> None:
+            if flushed["done"]:
+                return
+            flushed["done"] = True
+            try:
+                self.tracer.export(path)
+            except OSError:
+                pass                     # dying anyway — don't mask the why
+
+        previous = {}
+        for sig in signals:
+            def _handler(signum, frame, _sig=sig):
+                _flush()
+                prev = previous.get(_sig)
+                if callable(prev):
+                    prev(signum, frame)
+                elif prev == signal.default_int_handler or \
+                        _sig == signal.SIGINT:
+                    raise KeyboardInterrupt
+                else:
+                    signal.signal(_sig, signal.SIG_DFL)
+                    signal.raise_signal(_sig)
+            try:
+                previous[sig] = signal.signal(sig, _handler)
+            except (ValueError, OSError):
+                pass                     # non-main thread: atexit still fires
+        atexit.register(_flush)
+
+        def uninstall() -> None:
+            for sig, prev in previous.items():
+                try:
+                    signal.signal(sig, prev if prev is not None
+                                  else signal.SIG_DFL)
+                except (ValueError, OSError):
+                    pass
+            atexit.unregister(_flush)
+
+        return uninstall
 
     def reset(self) -> None:
         """Warmup boundary: zero metrics and drop recorded events."""

@@ -73,7 +73,9 @@ class ServingEngine:
                  max_stop_tokens: int = 4,
                  eos_check_interval: int = 8,
                  watchdog_ticks: int = 256,
-                 faults=None, telemetry=None):
+                 faults=None, telemetry=None,
+                 slo_ttft_s: Optional[float] = None,
+                 slo_itl_s: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.mod = models.get_module(cfg)
@@ -101,6 +103,10 @@ class ServingEngine:
         # optional Telemetry bundle (runtime.telemetry): shared across
         # scheduler rebuilds so metrics/trace survive max_new_cap growth
         self.telemetry = telemetry
+        # default SLO budgets (seconds) applied to requests that don't
+        # carry their own — feed the scheduler's goodput fraction
+        self.slo_ttft_s = slo_ttft_s
+        self.slo_itl_s = slo_itl_s
         self._sched: Optional[ContinuousBatchingScheduler] = None
         # jits for the legacy aligned baseline (benchmark comparison only)
         self._decode = jax.jit(
@@ -145,7 +151,8 @@ class ServingEngine:
                 max_stop_tokens=self.max_stop_tokens,
                 eos_check_interval=self.eos_check_interval,
                 watchdog_ticks=self.watchdog_ticks,
-                faults=self.faults, telemetry=self.telemetry)
+                faults=self.faults, telemetry=self.telemetry,
+                slo_ttft_s=self.slo_ttft_s, slo_itl_s=self.slo_itl_s)
             self._sched.pending.extend(pending)
         return self._sched
 
